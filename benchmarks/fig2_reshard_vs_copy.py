@@ -1,0 +1,67 @@
+"""Paper Fig. 2 — move_pages() vs raw memcpy (fresh vs pooled destination).
+
+The raw copy is the optimum any migration can reach.  The move_pages()
+analogue (SyncResharder) additionally pays the fresh-allocation zero pass
+and the blocking table maintenance; leap's copy phase goes straight into
+pooled slots.  ``derived`` = overhead % over the pooled-copy optimum.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, make_pool, timeit
+from repro.core import SyncResharder
+from repro.core.migrator import copy_chunk
+
+
+def run(n_blocks=256, block_kb=256):
+    total_mb = n_blocks * block_kb / 1024
+    ids = jnp.arange(n_blocks)
+    slots = jnp.arange(n_blocks)
+
+    # raw copy into pooled (pre-allocated, pre-touched) memory
+    cfg, drv, _ = make_pool(n_blocks, block_kb)
+    from benchmarks.common import timeit_inplace
+
+    st = copy_chunk(drv.state, ids, slots, 1)  # pre-touch dst slots
+    t_pooled, st = timeit_inplace(lambda s: copy_chunk(s, ids, slots, 1), st)
+
+    # raw copy into fresh memory (zero-fill pass first, like page faults)
+    from repro.core.baselines import _zero_fill
+
+    def fresh(s):
+        s = _zero_fill(s, slots, 1)
+        jax.block_until_ready(s.pool)
+        return copy_chunk(s, ids, slots, 1)
+
+    t_fresh, st = timeit_inplace(fresh, st)
+
+    emit(f"fig2/memcpy_pooled_{total_mb:.0f}MB", t_pooled * 1e6, "optimum")
+    emit(
+        f"fig2/memcpy_fresh_{total_mb:.0f}MB",
+        t_fresh * 1e6,
+        f"overhead={100 * (t_fresh / t_pooled - 1):.0f}%",
+    )
+
+    # move_pages() analogue: synchronous, fresh destination, blocking
+    import time
+
+    ts = []
+    for _ in range(3):
+        cfg2, drv2, _ = make_pool(n_blocks, block_kb)
+        rs = SyncResharder(cfg2, fresh_alloc=True)
+        t0 = time.perf_counter()
+        state, res = rs.migrate(drv2.state, drv2._table, drv2._free, np.arange(n_blocks), 1)
+        ts.append(time.perf_counter() - t0)
+    t_mp = float(np.median(ts))
+    emit(
+        f"fig2/move_pages_{total_mb:.0f}MB",
+        t_mp * 1e6,
+        f"overhead={100 * (t_mp / t_pooled - 1):.0f}%",
+    )
+    return {"pooled": t_pooled, "fresh": t_fresh, "move_pages": t_mp}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure (+ beyond-paper).
+
+Prints ``name,us_per_call,derived`` CSV.  Run:
+    PYTHONPATH=src python -m benchmarks.run [--only fig4_granularity,...]
+"""
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("fig1_local_remote", "run", {}),
+    ("fig2_reshard_vs_copy", "run", {}),
+    ("fig4_granularity", "run", {}),
+    ("fig5_concurrent", "run", {}),
+    ("fig5_concurrent", "run_huge", {}),
+    ("fig6_sustained", "run", {}),
+    ("table2_overhead", "run", {}),
+    ("fig8_tpch", "run", {}),
+    ("serving_rebalance", "run", {}),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name, fn_name, kw in SUITES:
+        if only and mod_name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
+            getattr(mod, fn_name)(**kw)
+            print(f"# {mod_name}.{fn_name} done in {time.time() - t0:.1f}s",
+                  file=sys.stderr, flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {mod_name}.{fn_name} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,86 @@
+"""Beyond-paper: live paged-KV rebalancing during batched decode.
+
+A batch of sequences decodes while one sequence's pages leap-migrate to
+another replica region.  Compares decode throughput (tokens/s) with no
+migration, with live leap migration, and with a stop-the-world sync
+reshard.  Also asserts token-identical outputs (the engine test's property,
+here at benchmark scale).
+"""
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import get_config
+from repro.configs.smoke import reduce
+from repro.core import LeapConfig
+from repro.models import lm
+from repro.serving.engine import PagedConfig, PagedEngine
+
+STEPS = 24
+
+
+def _engine(cfg, params):
+    return PagedEngine(
+        cfg, params,
+        PagedConfig(block_tokens=4, max_blocks_per_seq=32, n_regions=2,
+                    slots_per_region=128,
+                    leap=LeapConfig(initial_area_blocks=2, chunk_blocks=1,
+                                    budget_blocks_per_tick=2,
+                                    max_attempts_before_force=4)),
+    )
+
+
+def run():
+    cfg = dataclasses.replace(reduce(get_config("granite_3_2b")), n_layers=2)
+    params = lm.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=8) for _ in range(4)]
+
+    def decode_run(migrate: str):
+        eng = _engine(cfg, params)
+        sids = [eng.admit(p, region=0) for p in prompts]
+        toks = []
+        t0 = time.perf_counter()
+        if migrate == "sync":
+            # stop-the-world: drain a full migration before decoding resumes
+            eng.rebalance(sids[0], 1)
+            eng.drain()
+        elif migrate == "live":
+            eng.rebalance(sids[0], 1)
+        for _ in range(STEPS):
+            if migrate == "live":
+                eng.tick()
+            toks.append(tuple(eng.decode(sids)))
+        if migrate == "live":
+            assert eng.drain()
+        dt = time.perf_counter() - t0
+        return toks, dt
+
+    for mode in ("none", "live", "sync"):  # compile-cache warmup
+        decode_run(mode)
+    base, t_base = decode_run("none")
+    live, t_live = decode_run("live")
+    sync, t_sync = decode_run("sync")
+    assert live == base, "live migration changed decode outputs!"
+    assert sync == base
+    tps = STEPS * len(prompts)
+    emit("serving/decode_no_migration", t_base / tps * 1e6, "tok_s_base")
+    emit(
+        "serving/decode_live_leap",
+        t_live / tps * 1e6,
+        f"slowdown={100 * (t_live / t_base - 1):.0f}%;outputs=identical",
+    )
+    emit(
+        "serving/decode_sync_reshard",
+        t_sync / tps * 1e6,
+        f"slowdown={100 * (t_sync / t_base - 1):.0f}%;outputs=identical",
+    )
+    return True
+
+
+if __name__ == "__main__":
+    run()

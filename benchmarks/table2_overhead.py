@@ -1,0 +1,57 @@
+"""Paper Table 2 — memory and time overhead of page_leap() over raw memcpy
+under concurrent writes (100K-writes/s analogue = the "high" case).
+
+memory overhead: extra bytes copied due to dirty retries (stats-based).
+time overhead: wall time over copying the same useful bytes via raw copy.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import WriteBurst, emit, make_pool, timeit
+from repro.core import LeapConfig
+from repro.core.migrator import copy_chunk
+
+
+def run(n_blocks=256, block_kb=64, per_tick=8):
+    from benchmarks.common import timeit_inplace
+
+    ids, slots = jnp.arange(n_blocks), jnp.arange(n_blocks)
+    cfg, drv0, _ = make_pool(n_blocks, block_kb)
+    st = copy_chunk(drv0.state, ids, slots, 1)
+    t_opt, _ = timeit_inplace(lambda s: copy_chunk(s, ids, slots, 1), st)
+    useful_mb = n_blocks * block_kb / 1024
+
+    for area_blocks in (1, 8, 64, 256):
+        lc = LeapConfig(
+            initial_area_blocks=area_blocks,
+            chunk_blocks=min(area_blocks, 32),
+            budget_blocks_per_tick=64,
+            max_attempts_before_force=8,
+        )
+        _, drv, _ = make_pool(n_blocks, block_kb, leap=lc)
+        burst = WriteBurst(drv, n_blocks, per_tick)
+        drv.request(np.arange(n_blocks), 1)
+        t0 = time.perf_counter()
+        while not drv.done:
+            drv.tick()
+            burst.fire()
+        drv.drain()
+        jax.block_until_ready(drv.state.pool)
+        dt = time.perf_counter() - t0
+        extra = drv.stats.extra_bytes(drv.pool_cfg.block_bytes)
+        emit(
+            f"table2/area_{area_blocks * block_kb}KB",
+            dt * 1e6,
+            f"mem_overhead={100 * extra / (useful_mb * 2**20):.1f}%"
+            f";time_overhead={100 * (dt / t_opt - 1):.0f}%"
+            f";retries={drv.stats.dirty_rejections}",
+        )
+    return True
+
+
+if __name__ == "__main__":
+    run()

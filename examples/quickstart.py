@@ -1,0 +1,61 @@
+"""Quickstart: the leap migration engine in 60 lines.
+
+Creates a 2-region pool holding 64 blocks, starts an asynchronous migration
+while a writer keeps mutating blocks, and shows the dirty-retry protocol
+converging with zero lost writes.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LeapConfig, MigrationDriver, PoolConfig, init_state, leap_write
+
+
+def main():
+    # a pool of 64 logical blocks (4 KB each), all resident on region 0
+    cfg = PoolConfig(n_regions=2, slots_per_region=80, block_shape=(1, 1024))
+    state = init_state(cfg, n_blocks=64, initial_regions=np.zeros(64, np.int32))
+    rng = np.random.default_rng(0)
+    data = rng.standard_normal((64, 1, 1024), dtype=np.float32)
+    state = leap_write(state, jnp.arange(64), jnp.asarray(data))
+
+    drv = MigrationDriver(
+        state,
+        cfg,
+        LeapConfig(
+            initial_area_blocks=16,  # start coarse ("16MB sweet spot")
+            chunk_blocks=4,  # copy 4 blocks per dispatch
+            budget_blocks_per_tick=8,  # async budget per tick
+            max_attempts_before_force=4,  # write-through escalation
+        ),
+    )
+
+    print("requesting migration of all 64 blocks: region 0 -> region 1")
+    drv.request(np.arange(64), dst_region=1)
+
+    step = 0
+    expected = data.copy()
+    while not drv.done:
+        drv.tick()  # one asynchronous migration slice
+        # ... meanwhile the application keeps writing (concurrent mutations!)
+        ids = rng.choice(64, size=2, replace=False)
+        vals = rng.standard_normal((2, 1, 1024), dtype=np.float32)
+        drv.write(jnp.asarray(ids.astype(np.int32)), jnp.asarray(vals))
+        expected[ids] = vals
+        step += 1
+
+    s = drv.stats
+    print(f"done after {step} ticks: migrated={s.blocks_migrated} forced={s.blocks_forced}")
+    print(f"dirty rejections={s.dirty_rejections} splits={s.splits} "
+          f"extra copied={s.extra_bytes(cfg.block_bytes)} bytes")
+    placement = drv.host_placement()
+    assert (placement == 1).all(), "all blocks must be on region 1"
+    got = np.asarray(drv.read(jnp.arange(64)))
+    assert np.array_equal(got, expected), "no write may be lost"
+    print("placement verified; every concurrent write preserved ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Regenerate the §Dry-run / §Roofline tables inside EXPERIMENTS.md from the
+dry-run artifacts.  Idempotent (replaces the marked sections)."""
+
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.roofline.report import dryrun_table, roofline_table  # noqa: E402
+
+MD = "EXPERIMENTS.md"
+
+
+def main():
+    with open(MD) as f:
+        text = f.read()
+    dr = "\n\n".join(dryrun_table(m) for m in ("pod", "multipod"))
+    rf = "\n\n".join(roofline_table(m) for m in ("pod", "multipod"))
+    text = re.sub(
+        r"<!-- DRYRUN_TABLES -->.*?(?=\n## §Roofline)",
+        f"<!-- DRYRUN_TABLES -->\n\n{dr}\n",
+        text,
+        flags=re.S,
+    )
+    text = re.sub(
+        r"<!-- ROOFLINE_TABLES -->.*?(?=\n## §Perf)",
+        f"<!-- ROOFLINE_TABLES -->\n\n{rf}\n",
+        text,
+        flags=re.S,
+    )
+    with open(MD, "w") as f:
+        f.write(text)
+    print("tables injected")
+
+
+if __name__ == "__main__":
+    main()

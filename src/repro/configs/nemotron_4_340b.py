@@ -1,0 +1,29 @@
+"""Nemotron-4-340B [arXiv:2402.16819]: dense GQA decoder, squared-ReLU MLP.
+
+96L, d_model=18432, 96 heads (GQA kv=8, head_dim=192), d_ff=73728,
+vocab=256000.  Ungated squared-ReLU FFN (Primer), untied embeddings.
+AdamW m/v in bf16: the 340B optimizer state does not fit 16 GB/chip at
+256-way sharding in fp32 (DESIGN.md §7).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron_4_340b",
+    family="dense",
+    n_layers=96,
+    d_model=18432,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=192,
+    d_ff=73728,
+    vocab_size=256000,
+    layer_pattern=("attn",),
+    mlp_kind="relu2",
+    rope_theta=10_000.0,
+    opt_state_dtype="bfloat16",
+    grad_accum_dtype="bfloat16",  # §Perf iteration 4: fits 16 GB/chip HBM
+    microbatch_per_device=2,  # §Perf iteration 5: halves per-microbatch collective rounds
+    supports_long_context=False,  # pure full attention: long_500k skipped
+    notes="squared-ReLU (Primer) ungated FFN; GQA 96q/8kv @ hd=192",
+)

@@ -1,0 +1,83 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+Four shapes per LM architecture (seq_len x global_batch):
+  train_4k     4,096 x 256   training        -> lowers ``train_step``
+  prefill_32k  32,768 x 32   inference       -> lowers ``prefill``
+  decode_32k   32,768 x 128  decode          -> lowers ``serve_step`` (1 new
+                                               token, KV cache of seq_len)
+  long_500k    524,288 x 1   long-ctx decode -> serve_step; only for archs
+                                               with sub-quadratic attention
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs — shardable, no
+device allocation — for every model input of the given (arch x shape) cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+SKIP = "SKIP(full-attn)"
+
+
+def cell_status(cfg: ModelConfig, shape: str) -> str | None:
+    """None if the (arch, shape) cell runs; otherwise the skip reason."""
+    if shape == "long_500k" and not cfg.supports_long_context:
+        return SKIP
+    return None
+
+
+def token_inputs(cfg: ModelConfig, batch: int, seq: int) -> jax.ShapeDtypeStruct:
+    if cfg.embed_inputs:
+        return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    # modality frontend stub: precomputed frame/patch embeddings
+    return jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for the step function of this cell."""
+    sp = SHAPES[shape]
+    if sp.kind == "train":
+        return {
+            "inputs": token_inputs(cfg, sp.global_batch, sp.seq_len),
+            "labels": jax.ShapeDtypeStruct((sp.global_batch, sp.seq_len), jnp.int32),
+        }
+    if sp.kind == "prefill":
+        return {"inputs": token_inputs(cfg, sp.global_batch, sp.seq_len)}
+    if sp.kind == "decode":
+        # one new token against a cache of seq_len (built by cache_specs)
+        return {
+            "inputs": token_inputs(cfg, sp.global_batch, 1),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    raise ValueError(sp.kind)
+
+
+def cache_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStructs of the decode cache for this cell (no allocation)."""
+    from repro.models import lm
+
+    sp = SHAPES[shape]
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, sp.global_batch, sp.seq_len)
+    )

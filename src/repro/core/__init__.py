@@ -1,0 +1,48 @@
+"""Core: `page_leap()` adapted to TPU meshes — pooled, reliable, adaptive
+block migration behind a virtual block table (see DESIGN.md §2)."""
+
+from repro.core.state import (
+    REGION,
+    SLOT,
+    LeapState,
+    PoolConfig,
+    init_state,
+    leap_read,
+    leap_write,
+    leap_write_rows,
+    placement_histogram,
+    state_sharding,
+)
+from repro.core.adaptive import Area, decompose_request, split_area
+from repro.core.driver import LeapConfig, MigrationDriver, MigrationStats
+from repro.core.baselines import (
+    AutoBalanceConfig,
+    AutoBalancer,
+    SyncResharder,
+    SyncReshardResult,
+)
+from repro.core import migrator
+
+__all__ = [
+    "REGION",
+    "SLOT",
+    "LeapState",
+    "PoolConfig",
+    "init_state",
+    "leap_read",
+    "leap_write",
+    "leap_write_rows",
+    "placement_histogram",
+    "state_sharding",
+    "Area",
+    "decompose_request",
+    "split_area",
+    "LeapConfig",
+    "MigrationDriver",
+    "MigrationStats",
+    "AutoBalanceConfig",
+    "AutoBalancer",
+    "SyncResharder",
+    "SyncReshardResult",
+    "migrator",
+]

@@ -1,0 +1,176 @@
+"""Baseline migration mechanisms the paper compares against.
+
+``SyncResharder``  — the ``move_pages()`` analogue: synchronous (blocks the
+caller until done), migrates into *freshly allocated* memory (pays an extra
+zero-fill pass over the destination — the page-fault analogue), and is
+*unreliable*: blocks that are busy (dirty/in-flight at call time) are skipped
+and reported as failed, with no retry.
+
+``AutoBalancer``  — the Linux auto-NUMA-balancing analogue: a periodic scan
+over access counters; migrates a bounded number of "hot remote" blocks per
+scan, but only when observed write pressure is low (the kernel heuristic the
+paper shows "waits for times of little load ... which might never come").
+No completion guarantee, no user control.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.state import REGION, SLOT, LeapState, PoolConfig
+from repro.core import migrator
+
+
+@jax.jit
+def _busy_mask(state: LeapState, block_ids: jax.Array) -> jax.Array:
+    return state.dirty[block_ids] | state.in_flight[block_ids]
+
+
+@dataclasses.dataclass
+class SyncReshardResult:
+    migrated: np.ndarray  # block ids that moved
+    failed: np.ndarray  # busy blocks that were skipped (paper: EBUSY)
+    bytes_copied: int
+    bytes_touched: int  # includes the fresh-allocation zero pass
+
+
+class SyncResharder:
+    """``move_pages()`` analogue over a leap pool."""
+
+    def __init__(self, pool_cfg: PoolConfig, fresh_alloc: bool = True):
+        self.pool_cfg = pool_cfg
+        self.fresh_alloc = fresh_alloc
+
+    def migrate(
+        self,
+        state: LeapState,
+        table_host: np.ndarray,
+        free_slots: list[deque],
+        block_ids,
+        dst_region: int,
+    ) -> tuple[LeapState, SyncReshardResult]:
+        """Synchronously migrate ``block_ids``; the call blocks until complete."""
+        block_ids = np.asarray(block_ids, dtype=np.int32)
+        block_ids = block_ids[table_host[block_ids, REGION] != dst_region]
+        if len(block_ids) == 0:
+            empty = np.zeros(0, np.int32)
+            return state, SyncReshardResult(empty, empty, 0, 0)
+        busy = np.asarray(_busy_mask(state, jnp.asarray(block_ids)))
+        failed = block_ids[busy]
+        todo = block_ids[~busy]
+        if len(todo) == 0:
+            return state, SyncReshardResult(np.zeros(0, np.int32), failed, 0, 0)
+        free = free_slots[dst_region]
+        if len(free) < len(todo):
+            raise RuntimeError("destination region out of slots")
+        slots = np.asarray([free.popleft() for _ in range(len(todo))], dtype=np.int32)
+        ids_d = jnp.asarray(todo)
+        slots_d = jnp.asarray(slots)
+        bytes_touched = 0
+        if self.fresh_alloc:
+            # Page-fault analogue: freshly allocated pages are zero-filled by
+            # the kernel before the copy lands. A separate dispatch prevents
+            # XLA from eliding the dead store.
+            state = _zero_fill(state, slots_d, int(dst_region))
+            jax.block_until_ready(state.pool)
+            bytes_touched += len(todo) * self.pool_cfg.block_bytes
+        state = migrator.force_migrate(state, ids_d, slots_d, int(dst_region))
+        jax.block_until_ready(state.pool)  # synchronous, like the syscall
+        for i, b in enumerate(todo.tolist()):
+            old_r, old_s = int(table_host[b, REGION]), int(table_host[b, SLOT])
+            free_slots[old_r].append(old_s)
+            table_host[b, REGION] = dst_region
+            table_host[b, SLOT] = int(slots[i])
+        nbytes = len(todo) * self.pool_cfg.block_bytes
+        return state, SyncReshardResult(todo, failed, nbytes, bytes_touched + nbytes)
+
+
+@partial(jax.jit, donate_argnames=("state",), static_argnames=("dst_region",))
+def _zero_fill_impl(state: LeapState, slots: jax.Array, dst_region: int) -> LeapState:
+    pool = state.pool.at[dst_region, slots].set(0)
+    return dataclasses.replace(state, pool=pool)
+
+
+def _zero_fill(state, slots, dst_region):
+    return _zero_fill_impl(state, slots, dst_region)
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoBalanceConfig:
+    scan_budget_blocks: int = 32  # blocks migrated per scan, max
+    hot_threshold: int = 4  # remote accesses (since decay) to qualify
+    pressure_threshold: float = 0.05  # writes/block/tick above which it defers
+    decay: float = 0.5  # counter decay per scan
+
+
+class AutoBalancer:
+    """Access-pattern-driven implicit migration (no guarantees, no control)."""
+
+    def __init__(self, pool_cfg: PoolConfig, n_blocks: int, cfg: AutoBalanceConfig | None = None):
+        self.pool_cfg = pool_cfg
+        self.cfg = cfg or AutoBalanceConfig()
+        self.remote_counts = np.zeros(n_blocks, dtype=np.float64)
+        self.preferred_region = np.full(n_blocks, -1, dtype=np.int32)
+        self.recent_writes = 0.0
+        self.blocks_migrated = 0
+        self.bytes_copied = 0
+
+    def observe_reads(self, block_ids, reader_region: int, table_host: np.ndarray) -> None:
+        block_ids = np.asarray(block_ids)
+        remote = table_host[block_ids, REGION] != reader_region
+        np.add.at(self.remote_counts, block_ids[remote], 1.0)
+        self.preferred_region[block_ids[remote]] = reader_region
+
+    def observe_writes(self, n_writes: int) -> None:
+        self.recent_writes += n_writes
+
+    def scan(
+        self,
+        state: LeapState,
+        table_host: np.ndarray,
+        free_slots: list[deque],
+    ) -> tuple[LeapState, int]:
+        """One balancing scan; returns (state, blocks migrated this scan)."""
+        n_blocks = len(self.remote_counts)
+        pressure = self.recent_writes / max(n_blocks, 1)
+        self.recent_writes = 0.0
+        if pressure > self.cfg.pressure_threshold:
+            # Defers under write load — the unreliability the paper measures.
+            # (Counters are retained so the hint survives until an idle scan.)
+            return state, 0
+        hot = np.nonzero(self.remote_counts >= self.cfg.hot_threshold)[0]
+        if len(hot) == 0:
+            self.remote_counts *= self.cfg.decay
+            return state, 0
+        hot = hot[np.argsort(-self.remote_counts[hot])][: self.cfg.scan_budget_blocks]
+        moved = 0
+        for dst in np.unique(self.preferred_region[hot]):
+            if dst < 0:
+                continue
+            ids = hot[self.preferred_region[hot] == dst]
+            free = free_slots[int(dst)]
+            ids = ids[: len(free)]
+            if len(ids) == 0:
+                continue
+            slots = np.asarray([free.popleft() for _ in range(len(ids))], dtype=np.int32)
+            state = _zero_fill(state, jnp.asarray(slots), int(dst))  # fresh alloc
+            state = migrator.force_migrate(
+                state, jnp.asarray(ids.astype(np.int32)), jnp.asarray(slots), int(dst)
+            )
+            for i, b in enumerate(ids.tolist()):
+                old_r, old_s = int(table_host[b, REGION]), int(table_host[b, SLOT])
+                free_slots[old_r].append(old_s)
+                table_host[b, REGION] = int(dst)
+                table_host[b, SLOT] = int(slots[i])
+            self.remote_counts[ids] = 0.0
+            moved += len(ids)
+            self.bytes_copied += len(ids) * self.pool_cfg.block_bytes
+        self.blocks_migrated += moved
+        self.remote_counts *= self.cfg.decay
+        return state, moved

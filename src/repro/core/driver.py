@@ -1,0 +1,330 @@
+"""Host-side control plane for leap migration (the user-space part).
+
+The paper's `page_leap()` runs its migration loop in a user-space thread:
+pick an area, copy it, check the dirty flag, remap or requeue.  Here the
+control plane is ordinary Python driving jitted device programs.  Everything
+that was "a helper structure in user-space" in the paper (the area queue,
+free-slot lists, the page-table mirror, retry/split policy, statistics)
+lives in :class:`MigrationDriver`.
+
+Asynchrony model: every device program is dispatched asynchronously; the
+driver only blocks when it *needs* a commit verdict and the device hasn't
+produced it yet.  Interleaving application write/compute steps between
+``tick()`` calls reproduces the paper's concurrent-writer races at step
+granularity (see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import numpy as np
+
+from repro.core import migrator
+from repro.core.adaptive import Area, decompose_request, split_area
+from repro.core.state import REGION, SLOT, LeapState, PoolConfig, leap_read, leap_write, leap_write_rows
+
+
+@dataclasses.dataclass(frozen=True)
+class LeapConfig:
+    """Tuning knobs of the migration engine (paper defaults in comments)."""
+
+    initial_area_blocks: int = 64  # "initial area size" (16MB sweet spot)
+    reduction_factor: int = 2  # split factor on dirty retry
+    min_area_blocks: int = 1
+    chunk_blocks: int = 16  # copy-dispatch granularity within an epoch
+    budget_blocks_per_tick: int = 64  # async migration budget per tick/step
+    max_attempts_before_force: int = 8  # write-through escalation (beyond paper)
+    backend: str = "xla"  # "xla" | "ppermute"
+    axis_name: str | None = None  # region mesh axis (ppermute backend)
+
+
+@dataclasses.dataclass
+class MigrationStats:
+    blocks_requested: int = 0
+    blocks_migrated: int = 0
+    blocks_forced: int = 0
+    bytes_copied: int = 0  # includes retry traffic (Table 2 accounting)
+    dirty_rejections: int = 0
+    splits: int = 0
+    dispatches: int = 0
+    ticks: int = 0
+
+    def extra_bytes(self, block_bytes: int) -> int:
+        useful = (self.blocks_migrated + self.blocks_forced) * block_bytes
+        return max(0, self.bytes_copied - useful)
+
+
+class MigrationDriver:
+    """Owns a :class:`LeapState` and migrates blocks reliably between regions."""
+
+    def __init__(
+        self,
+        state: LeapState,
+        pool_cfg: PoolConfig,
+        cfg: LeapConfig | None = None,
+        mesh: jax.sharding.Mesh | None = None,
+    ):
+        self.state = state
+        self.pool_cfg = pool_cfg
+        self.cfg = cfg or LeapConfig()
+        self.mesh = mesh
+        self.stats = MigrationStats()
+        # Host mirrors (the driver performs every allocation/remap, so these
+        # stay exact without device round-trips).
+        self._table = np.asarray(state.table).copy()
+        used = [set() for _ in range(pool_cfg.n_regions)]
+        for b in range(state.n_blocks):
+            used[self._table[b, REGION]].add(int(self._table[b, SLOT]))
+        self._free: list[deque[int]] = [
+            deque(s for s in range(pool_cfg.slots_per_region) if s not in used[r])
+            for r in range(pool_cfg.n_regions)
+        ]
+        self._queue: deque[Area] = deque()
+        self._active: list[Area] = []
+        # (area, verdict_device_array) pairs awaiting host processing
+        self._pending: list[tuple[Area, jax.Array]] = []
+        self._migrating: set[int] = set()  # block ids with an open request
+
+    # -- application-facing I/O (everything mutating goes through here) ----
+
+    def read(self, block_ids) -> jax.Array:
+        return leap_read(self.state, jax.numpy.asarray(block_ids))
+
+    def write(self, block_ids, values) -> None:
+        self.state = leap_write(self.state, jax.numpy.asarray(block_ids), values)
+
+    def write_rows(self, block_ids, row_offsets, rows) -> None:
+        self.state = leap_write_rows(
+            self.state,
+            jax.numpy.asarray(block_ids),
+            jax.numpy.asarray(row_offsets),
+            rows,
+        )
+
+    # -- migration API ------------------------------------------------------
+
+    def request(self, block_ids, dst_region: int) -> int:
+        """Enqueue migration of ``block_ids`` to ``dst_region``.
+
+        Blocks already at the destination or already under migration are
+        skipped.  Returns the number of blocks actually enqueued.
+        """
+        block_ids = np.asarray(block_ids, dtype=np.int32)
+        mask = (self._table[block_ids, REGION] != dst_region) & np.array(
+            [b not in self._migrating for b in block_ids.tolist()]
+        )
+        block_ids = block_ids[mask]
+        if len(block_ids) == 0:
+            return 0
+        self._migrating.update(int(b) for b in block_ids.tolist())
+        self.stats.blocks_requested += len(block_ids)
+        # Group by current source region (areas are single-source so the
+        # ppermute backend has static endpoints).
+        srcs = self._table[block_ids, REGION]
+        for src in np.unique(srcs):
+            ids = block_ids[srcs == src]
+            self._queue.extend(
+                decompose_request(ids, int(src), dst_region, self.cfg.initial_area_blocks)
+            )
+        return len(block_ids)
+
+    @property
+    def done(self) -> bool:
+        return not (self._queue or self._active or self._pending)
+
+    @property
+    def pending_blocks(self) -> int:
+        n = sum(len(a) for a in self._queue) + sum(len(a) for a in self._active)
+        n += sum(len(a) for a, _ in self._pending)
+        return n
+
+    # -- the migration loop --------------------------------------------------
+
+    def tick(self) -> None:
+        """One asynchronous migration slice: spend the per-tick block budget.
+
+        A tick (i) harvests any commit verdicts that are already on the host,
+        (ii) advances copies of open epochs, (iii) opens new epochs, and
+        (iv) dispatches commits for fully-copied areas.  Dispatches are async;
+        interleave application steps between ticks for concurrency.
+        """
+        self.stats.ticks += 1
+        self._harvest(block=False)
+        # Commit epochs whose copy completed in an earlier tick.  Deferring the
+        # commit by one tick keeps the copy->remap window open across at least
+        # one application step, faithfully reproducing the paper's race (its
+        # footnote 1: a write can land after the copy but before the remap).
+        for area in [a for a in self._active if a.copied == len(a)]:
+            self._dispatch_commit(area)
+        budget = self.cfg.budget_blocks_per_tick
+
+        while budget > 0:
+            area = self._next_copyable()
+            if area is not None:
+                n = min(self.cfg.chunk_blocks, len(area) - area.copied, budget)
+                ids = area.block_ids[area.copied : area.copied + n]
+                slots = area.dst_slots[area.copied : area.copied + n]
+                self._dispatch_copy(area, ids, slots)
+                area.copied += n
+                budget -= n
+                continue
+            if self._queue:
+                if not self._open_epoch(self._queue.popleft()):
+                    break  # destination out of slots; wait for frees
+                continue
+            break
+
+    def drain(self, max_ticks: int = 100_000) -> bool:
+        """Run ticks until all requested blocks migrated (or tick budget ends).
+
+        Returns True on full migration.  With write-through escalation this
+        terminates for any write workload (beyond-paper guarantee); the tick
+        cap is the analogue of the paper's 10s timeout.
+        """
+        ticks = 0
+        while not self.done and ticks < max_ticks:
+            self.tick()
+            self._harvest(block=True)
+            ticks += 1
+        return self.done
+
+    # -- internals ------------------------------------------------------------
+
+    def _next_copyable(self) -> Area | None:
+        for a in self._active:
+            if a.copied < len(a):
+                return a
+        return None
+
+    def _alloc(self, region: int, n: int) -> np.ndarray | None:
+        free = self._free[region]
+        if len(free) < n:
+            return None
+        return np.asarray([free.popleft() for _ in range(n)], dtype=np.int32)
+
+    def _open_epoch(self, area: Area) -> bool:
+        slots = self._alloc(area.dst_region, len(area))
+        if slots is None:
+            # Not enough pooled slots for the whole area right now.  If the
+            # destination has *some* space, split and make progress with the
+            # smaller half; otherwise wait for commits to free slots.
+            if len(area) > 1 and len(self._free[area.dst_region]) > 0:
+                mid = len(area) // 2
+                a = Area(area.block_ids[:mid], area.src_region, area.dst_region, area.attempts)
+                b = Area(area.block_ids[mid:], area.src_region, area.dst_region, area.attempts)
+                self._queue.appendleft(b)
+                self._queue.appendleft(a)
+                return True
+            self._queue.appendleft(area)
+            return False
+        area.dst_slots = slots
+        area.copied = 0
+        if area.attempts >= self.cfg.max_attempts_before_force:
+            # Write-through escalation: fused copy+flip, cannot be dirtied.
+            self.state = migrator.force_migrate(
+                self.state,
+                jax.numpy.asarray(area.block_ids),
+                jax.numpy.asarray(slots),
+                int(area.dst_region),
+            )
+            self.stats.dispatches += 1
+            self.stats.bytes_copied += len(area) * self.pool_cfg.block_bytes
+            self.stats.blocks_forced += len(area)
+            self._finalize_success(area, np.zeros(len(area), dtype=bool))
+            return True
+        self.state = migrator.begin_area(self.state, jax.numpy.asarray(area.block_ids))
+        self.stats.dispatches += 1
+        self._active.append(area)
+        return True
+
+    def _dispatch_copy(self, area: Area, ids: np.ndarray, slots: np.ndarray) -> None:
+        if self.cfg.backend == "ppermute":
+            if self.mesh is None or self.cfg.axis_name is None:
+                raise ValueError("ppermute backend requires mesh and axis_name")
+            self.state = migrator.copy_chunk_ppermute(
+                self.state,
+                jax.numpy.asarray(ids),
+                jax.numpy.asarray(slots),
+                int(area.src_region),
+                int(area.dst_region),
+                self.cfg.axis_name,
+                self.mesh,
+            )
+        else:
+            self.state = migrator.copy_chunk(
+                self.state,
+                jax.numpy.asarray(ids),
+                jax.numpy.asarray(slots),
+                int(area.dst_region),
+            )
+        self.stats.dispatches += 1
+        self.stats.bytes_copied += len(ids) * self.pool_cfg.block_bytes
+
+    def _dispatch_commit(self, area: Area) -> None:
+        self.state, verdict = migrator.commit_area(
+            self.state,
+            jax.numpy.asarray(area.block_ids),
+            jax.numpy.asarray(area.dst_slots),
+            int(area.dst_region),
+        )
+        self.stats.dispatches += 1
+        self._active.remove(area)
+        self._pending.append((area, verdict))
+
+    def _harvest(self, block: bool) -> None:
+        still = []
+        for area, verdict in self._pending:
+            ready = block
+            if not ready:
+                try:
+                    ready = verdict.is_ready()
+                except AttributeError:  # pragma: no cover - older jax
+                    ready = True
+            if not ready:
+                still.append((area, verdict))
+                continue
+            self._process_verdict(area, np.asarray(verdict))
+        self._pending = still
+
+    def _process_verdict(self, area: Area, dirty: np.ndarray) -> None:
+        clean = ~dirty
+        # Clean blocks: the remap took effect on device; mirror it.
+        for i in np.nonzero(clean)[0]:
+            b = int(area.block_ids[i])
+            old_r, old_s = int(self._table[b, REGION]), int(self._table[b, SLOT])
+            self._free[old_r].append(old_s)
+            self._table[b, REGION] = area.dst_region
+            self._table[b, SLOT] = int(area.dst_slots[i])
+            self._migrating.discard(b)
+        self.stats.blocks_migrated += int(clean.sum())
+        # Dirty blocks: stale copies; free reserved slots and requeue smaller.
+        n_dirty = int(dirty.sum())
+        if n_dirty:
+            self.stats.dirty_rejections += n_dirty
+            for i in np.nonzero(dirty)[0]:
+                self._free[area.dst_region].append(int(area.dst_slots[i]))
+            subs = split_area(area, dirty, self.cfg.reduction_factor, self.cfg.min_area_blocks)
+            self.stats.splits += max(0, len(subs) - 1)
+            self._queue.extend(subs)
+
+    def _finalize_success(self, area: Area, dirty: np.ndarray) -> None:
+        # Force path: all blocks flipped on device; mirror and free sources.
+        for i in range(len(area)):
+            b = int(area.block_ids[i])
+            old_r, old_s = int(self._table[b, REGION]), int(self._table[b, SLOT])
+            self._free[old_r].append(old_s)
+            self._table[b, REGION] = area.dst_region
+            self._table[b, SLOT] = int(area.dst_slots[i])
+            self._migrating.discard(b)
+
+    # -- introspection ---------------------------------------------------------
+
+    def host_placement(self) -> np.ndarray:
+        return self._table[:, REGION].copy()
+
+    def verify_mirror(self) -> bool:
+        """Debug: host table mirror must match device table exactly."""
+        return bool(np.array_equal(self._table, np.asarray(self.state.table)))

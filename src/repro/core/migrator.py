@@ -1,0 +1,170 @@
+"""Jitted migration programs: the device data plane of ``page_leap()``.
+
+An area's life cycle (driven from the host by :mod:`repro.core.driver`):
+
+    begin_area   -> open the copy epoch (set in_flight, clear dirty)
+    copy_chunk*  -> physical copy, source region -> pooled destination slots
+                    (budgeted; an epoch may span many steps, which is the
+                    window in which concurrent writes can dirty a block)
+    commit_area  -> the atomic "remap": flip table entries of *clean* blocks
+                    to their destination, return the dirty verdict so the
+                    host can requeue dirty blocks with adaptive splitting
+
+``force_migrate`` fuses copy+flip into one XLA program.  Because writes are
+serialized against programs at step granularity, a fused copy+flip has no
+race window at all — this is the write-through escalation that gives the
+(beyond-paper) deterministic-termination guarantee.
+
+Two copy backends:
+
+  * ``xla``       — indexed gather/scatter across the sharded region dim;
+                    GSPMD materializes the cross-region traffic.  Works on
+                    any mesh (incl. compound ("pod","data") region axes) and
+                    on a single device.
+  * ``ppermute``  — shard_map + ``lax.ppermute`` with *static* src/dst
+                    regions: exactly one point-to-point ICI transfer of the
+                    area bytes (the `memcpy` analogue).  The local HBM
+                    gather/scatter packing inside the shard is the
+                    ``leap_copy`` Pallas kernel on TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.state import REGION, SLOT, LeapState
+
+try:  # JAX >= 0.7 public API
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+from jax.sharding import PartitionSpec as P
+
+
+# --------------------------------------------------------------------------
+# Epoch control
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, donate_argnames=("state",))
+def begin_area(state: LeapState, block_ids: jax.Array) -> LeapState:
+    """Open a copy epoch: mark blocks in flight, clear their dirty bits."""
+    in_flight = state.in_flight.at[block_ids].set(True)
+    dirty = state.dirty.at[block_ids].set(False)
+    return dataclasses.replace(state, in_flight=in_flight, dirty=dirty)
+
+
+@partial(jax.jit, donate_argnames=("state",), static_argnames=("dst_region",))
+def copy_chunk(
+    state: LeapState,
+    block_ids: jax.Array,
+    dst_slots: jax.Array,
+    dst_region: int,
+) -> LeapState:
+    """Physical copy of ``block_ids`` into ``(dst_region, dst_slots)``.
+
+    Pure data movement — the table is untouched, so readers keep hitting the
+    source location (non-atomic copy phase, exactly as in the paper).
+    """
+    loc = state.table[block_ids]
+    src = state.pool[loc[:, REGION], loc[:, SLOT]]
+    pool = state.pool.at[dst_region, dst_slots].set(src)
+    return dataclasses.replace(state, pool=pool)
+
+
+def _ppermute_local(src_region, dst_region, axis_name, pool, table, block_ids, dst_slots):
+    # pool arrives as the local shard [R/axis, S, *blk]; with one region per
+    # shard, index 0 is "my region".
+    slots = table[block_ids, SLOT]
+    buf = pool[0, slots]  # garbage on non-source shards; masked below
+    recv = lax.ppermute(buf, axis_name, perm=[(src_region, dst_region)])
+    me = lax.axis_index(axis_name)
+    cur = pool[0, dst_slots]
+    upd = jnp.where(me == dst_region, recv, cur)
+    return pool.at[0, dst_slots].set(upd)
+
+
+@partial(
+    jax.jit,
+    donate_argnames=("state",),
+    static_argnames=("src_region", "dst_region", "axis_name", "mesh"),
+)
+def copy_chunk_ppermute(
+    state: LeapState,
+    block_ids: jax.Array,
+    dst_slots: jax.Array,
+    src_region: int,
+    dst_region: int,
+    axis_name: str,
+    mesh: jax.sharding.Mesh,
+) -> LeapState:
+    """Point-to-point copy backend: one ``ppermute`` of exactly the area bytes."""
+    fn = _shard_map(
+        partial(_ppermute_local, src_region, dst_region, axis_name),
+        mesh=mesh,
+        in_specs=(
+            P(axis_name),  # pool: region dim sharded
+            P(),  # table replicated
+            P(),  # block ids replicated
+            P(),  # dst slots replicated
+        ),
+        out_specs=P(axis_name),
+    )
+    pool = fn(state.pool, state.table, block_ids, dst_slots)
+    return dataclasses.replace(state, pool=pool)
+
+
+@partial(jax.jit, donate_argnames=("state",), static_argnames=("dst_region",))
+def commit_area(
+    state: LeapState,
+    block_ids: jax.Array,
+    dst_slots: jax.Array,
+    dst_region: int,
+) -> tuple[LeapState, jax.Array]:
+    """The atomic remap: flip table entries of clean blocks; report dirty ones.
+
+    Mirrors Fig. 3b of the paper: a block that became dirty during its copy
+    epoch keeps its old mapping (the stale destination copy is discarded by
+    the host, which frees the reserved slots and requeues a split area).
+    """
+    verdict = state.dirty[block_ids]  # True => copy invalidated
+    proposed = jnp.stack(
+        [jnp.full_like(dst_slots, dst_region), dst_slots], axis=1
+    ).astype(state.table.dtype)
+    new_entries = jnp.where(verdict[:, None], state.table[block_ids], proposed)
+    table = state.table.at[block_ids].set(new_entries)
+    in_flight = state.in_flight.at[block_ids].set(False)
+    return dataclasses.replace(state, table=table, in_flight=in_flight), verdict
+
+
+@partial(jax.jit, donate_argnames=("state",), static_argnames=("dst_region",))
+def force_migrate(
+    state: LeapState,
+    block_ids: jax.Array,
+    dst_slots: jax.Array,
+    dst_region: int,
+) -> LeapState:
+    """Fused copy+remap (write-through escalation): no race window exists.
+
+    Any write dispatched before this program is copied; any write dispatched
+    after it goes through the already-flipped table.  Used by the driver after
+    ``max_attempts`` dirty rejections to guarantee termination (beyond-paper).
+    """
+    loc = state.table[block_ids]
+    src = state.pool[loc[:, REGION], loc[:, SLOT]]
+    pool = state.pool.at[dst_region, dst_slots].set(src)
+    entries = jnp.stack(
+        [jnp.full_like(dst_slots, dst_region), dst_slots], axis=1
+    ).astype(state.table.dtype)
+    table = state.table.at[block_ids].set(entries)
+    in_flight = state.in_flight.at[block_ids].set(False)
+    dirty = state.dirty.at[block_ids].set(False)
+    return dataclasses.replace(
+        state, pool=pool, table=table, in_flight=in_flight, dirty=dirty
+    )

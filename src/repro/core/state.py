@@ -1,0 +1,207 @@
+"""Leap pool state: the device-resident data plane of `page_leap()` on TPU.
+
+The paper separates *virtual* pages (what the application names) from
+*physical* pages (where bytes live) and migrates by copying physically and
+re-mapping virtually.  Here the same separation is:
+
+  logical block id  (0..n_blocks)    -- what the application names
+  (region, slot)                     -- where the bytes live: ``pool[r, s]``
+
+``pool`` is a single pre-allocated buffer ``[n_regions, slots_per_region,
+*block_shape]`` whose leading (region) dimension is sharded over a mesh axis
+in production, so region ``r`` physically lives in the HBM of mesh row ``r``
+("NUMA region" ≙ mesh region).  The ``table`` maps logical blocks to their
+physical location and is replicated (it is the page table).  ``dirty`` and
+``in_flight`` implement the paper's write-detection protocol: a write to a
+block that is currently being copied marks it dirty, which causes the commit
+(the atomic "remap") to reject and requeue the block.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REGION = 0  # column index of the region coordinate in ``table``
+SLOT = 1  # column index of the slot coordinate in ``table``
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolConfig:
+    """Static description of a leap pool.
+
+    Attributes:
+      n_regions: number of memory regions (NUMA analogue; mesh-axis size).
+      slots_per_region: physical capacity of each region, in blocks.
+      block_shape: shape of one block's payload (e.g. ``(rows, cols)`` for a
+        morsel pool or ``(blk_tokens, 2, kv_heads, head_dim)`` for KV).
+      dtype: payload dtype.
+      region_axis: mesh axis name the region dim is sharded over, or None for
+        single-device operation (tests / benches).
+    """
+
+    n_regions: int
+    slots_per_region: int
+    block_shape: tuple[int, ...]
+    dtype: jnp.dtype = jnp.float32
+    region_axis: str | tuple[str, ...] | None = None
+
+    @property
+    def block_elems(self) -> int:
+        return int(np.prod(self.block_shape))
+
+    @property
+    def block_bytes(self) -> int:
+        return self.block_elems * jnp.dtype(self.dtype).itemsize
+
+    @property
+    def capacity_blocks(self) -> int:
+        return self.n_regions * self.slots_per_region
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LeapState:
+    """Device-resident migration state (a pytree; all programs are pure).
+
+    pool:      [R, S, *block_shape]  physical storage, region-major.
+    table:     [N, 2] int32          logical block -> (region, slot).
+    dirty:     [N]    bool           written while in flight (invalidates copy).
+    in_flight: [N]    bool           currently under an open copy epoch.
+    """
+
+    pool: jax.Array
+    table: jax.Array
+    dirty: jax.Array
+    in_flight: jax.Array
+
+    @property
+    def n_blocks(self) -> int:
+        return self.table.shape[0]
+
+
+def init_state(
+    cfg: PoolConfig,
+    n_blocks: int,
+    initial_regions: Sequence[int] | np.ndarray,
+) -> LeapState:
+    """Create a pool with ``n_blocks`` logical blocks placed per ``initial_regions``.
+
+    Blocks are assigned slots densely within each region, in block-id order
+    (the host driver mirrors this allocation).
+    """
+    initial_regions = np.asarray(initial_regions, dtype=np.int32)
+    if initial_regions.shape != (n_blocks,):
+        raise ValueError(
+            f"initial_regions must have shape ({n_blocks},), got {initial_regions.shape}"
+        )
+    if n_blocks > cfg.capacity_blocks:
+        raise ValueError("more logical blocks than physical capacity")
+    slots = np.zeros(n_blocks, dtype=np.int32)
+    next_free = np.zeros(cfg.n_regions, dtype=np.int64)
+    for b in range(n_blocks):
+        r = initial_regions[b]
+        slots[b] = next_free[r]
+        next_free[r] += 1
+        if next_free[r] > cfg.slots_per_region:
+            raise ValueError(f"region {r} over capacity during initial placement")
+    table = jnp.stack(
+        [jnp.asarray(initial_regions), jnp.asarray(slots)], axis=1
+    ).astype(jnp.int32)
+    pool = jnp.zeros((cfg.n_regions, cfg.slots_per_region) + tuple(cfg.block_shape), cfg.dtype)
+    return LeapState(
+        pool=pool,
+        table=table,
+        dirty=jnp.zeros((n_blocks,), jnp.bool_),
+        in_flight=jnp.zeros((n_blocks,), jnp.bool_),
+    )
+
+
+def state_sharding(cfg: PoolConfig, mesh: jax.sharding.Mesh) -> LeapState:
+    """NamedSharding pytree for a LeapState on ``mesh``.
+
+    The pool's region dim is sharded over ``cfg.region_axis``; the table and
+    flag vectors are replicated (they are the "page table" every region
+    consults).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    axis = cfg.region_axis
+    ndim_payload = len(cfg.block_shape)
+    pool_spec = P(axis, *([None] * (1 + ndim_payload)))
+    rep = NamedSharding(mesh, P())
+    return LeapState(
+        pool=NamedSharding(mesh, pool_spec),
+        table=rep,
+        dirty=rep,
+        in_flight=rep,
+    )
+
+
+# --------------------------------------------------------------------------
+# Logical reads / writes through the table.
+#
+# ``leap_write`` is the SIGSEGV-handler analogue: the framework owns every
+# mutation, so "trapping" a write is simply fusing ``dirty |= in_flight`` into
+# the write program.  Writes always land at the *current* physical location;
+# dirtiness only matters for blocks with an open copy epoch.
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, donate_argnames=())
+def leap_read(state: LeapState, block_ids: jax.Array) -> jax.Array:
+    """Gather whole blocks: returns ``[len(block_ids), *block_shape]``."""
+    loc = state.table[block_ids]
+    return state.pool[loc[:, REGION], loc[:, SLOT]]
+
+
+@partial(jax.jit, donate_argnames=("state",))
+def leap_write(state: LeapState, block_ids: jax.Array, values: jax.Array) -> LeapState:
+    """Overwrite whole blocks; marks in-flight blocks dirty."""
+    loc = state.table[block_ids]
+    pool = state.pool.at[loc[:, REGION], loc[:, SLOT]].set(
+        values.astype(state.pool.dtype)
+    )
+    dirty = state.dirty.at[block_ids].set(
+        state.dirty[block_ids] | state.in_flight[block_ids]
+    )
+    return dataclasses.replace(state, pool=pool, dirty=dirty)
+
+
+@partial(jax.jit, donate_argnames=("state",))
+def leap_write_rows(
+    state: LeapState,
+    block_ids: jax.Array,
+    row_offsets: jax.Array,
+    rows: jax.Array,
+) -> LeapState:
+    """Partial-block write: one row (first payload dim) per entry.
+
+    ``rows`` has shape ``[K, *block_shape[1:]]``.  Same dirty semantics as
+    ``leap_write`` — the paper's protocol does not care how much of the page
+    was written, only *that* it was written during an open copy.
+    """
+    loc = state.table[block_ids]
+    pool = state.pool.at[loc[:, REGION], loc[:, SLOT], row_offsets].set(
+        rows.astype(state.pool.dtype)
+    )
+    dirty = state.dirty.at[block_ids].set(
+        state.dirty[block_ids] | state.in_flight[block_ids]
+    )
+    return dataclasses.replace(state, pool=pool, dirty=dirty)
+
+
+@jax.jit
+def block_regions(state: LeapState, block_ids: jax.Array) -> jax.Array:
+    return state.table[block_ids, REGION]
+
+
+def placement_histogram(state: LeapState, n_regions: int) -> np.ndarray:
+    """Host-side histogram: how many blocks currently live on each region."""
+    regions = np.asarray(state.table[:, REGION])
+    return np.bincount(regions, minlength=n_regions)

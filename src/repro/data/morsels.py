@@ -1,0 +1,92 @@
+"""Morsel store: fixed-size row-group morsels living on a leap pool.
+
+The paper's §7 scenario: a morsel-driven engine [Leis et al., SIGMOD'14]
+whose morsels sit on the wrong NUMA region get leap-migrated to the idle
+worker's region before/while query processing.  Here one morsel = one leap
+block ``[rows_per_morsel, n_cols]``; queries read through the block table
+(transparent — migration never changes a morsel id), and concurrent
+transactional writes go through ``write_rows`` (dirty protocol applies).
+
+Also used for training-data work stealing (straggler mitigation): a region
+that drains its morsel queue steals morsels from the most loaded region.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LeapConfig, MigrationDriver, PoolConfig, init_state
+
+
+@dataclasses.dataclass
+class MorselStore:
+    driver: MigrationDriver
+    rows_per_morsel: int
+    n_cols: int
+    n_morsels: int
+
+    @classmethod
+    def create(
+        cls,
+        data: np.ndarray,  # [n_rows, n_cols]
+        rows_per_morsel: int,
+        n_regions: int,
+        initial_region: int | np.ndarray = 0,
+        region_capacity_frac: float = 1.0,
+        leap: LeapConfig | None = None,
+        dtype=jnp.float32,
+    ) -> "MorselStore":
+        """``region_capacity_frac``: each region's pooled capacity as a
+        fraction of the total morsel count (1.0 = any single region can hold
+        the whole table, the paper's pooled-destination setup)."""
+        n_rows, n_cols = data.shape
+        n_morsels = (n_rows + rows_per_morsel - 1) // rows_per_morsel
+        pad = n_morsels * rows_per_morsel - n_rows
+        if pad:
+            data = np.concatenate([data, np.zeros((pad, n_cols), data.dtype)])
+        slots = int(np.ceil(n_morsels * region_capacity_frac)) + 1
+        pool_cfg = PoolConfig(n_regions, slots, (rows_per_morsel, n_cols), dtype)
+        if np.isscalar(initial_region):
+            placement = np.full(n_morsels, initial_region, np.int32)
+        else:
+            placement = np.asarray(initial_region, np.int32)
+        state = init_state(pool_cfg, n_morsels, placement)
+        driver = MigrationDriver(state, pool_cfg, leap or LeapConfig())
+        blocks = data.reshape(n_morsels, rows_per_morsel, n_cols)
+        driver.write(jnp.arange(n_morsels), jnp.asarray(blocks, dtype))
+        return cls(driver, rows_per_morsel, n_cols, n_morsels)
+
+    # -- access ---------------------------------------------------------------
+
+    def read(self, morsel_ids) -> jax.Array:
+        return self.driver.read(morsel_ids)
+
+    def write_rows(self, morsel_ids, row_offsets, rows) -> None:
+        self.driver.write_rows(morsel_ids, row_offsets, rows)
+
+    def write_random_fields(self, rng: np.random.Generator, n: int, col: int, value=0.0):
+        """Transactional write burst: ``n`` random single-row field updates."""
+        ids = rng.integers(0, self.n_morsels, size=n)
+        offs = rng.integers(0, self.rows_per_morsel, size=n)
+        current = np.asarray(self.read(jnp.asarray(ids)))
+        rows = current[np.arange(n), offs]
+        rows[:, col] = value
+        self.write_rows(jnp.asarray(ids), jnp.asarray(offs), jnp.asarray(rows))
+
+    # -- migration -------------------------------------------------------------
+
+    def steal(self, morsel_ids, dst_region: int) -> int:
+        return self.driver.request(np.asarray(morsel_ids), dst_region)
+
+    def placement(self) -> np.ndarray:
+        return self.driver.host_placement()
+
+    def tick(self) -> None:
+        self.driver.tick()
+
+    def drain(self, max_ticks: int = 100_000) -> bool:
+        return self.driver.drain(max_ticks)

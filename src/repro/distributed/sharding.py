@@ -1,0 +1,277 @@
+"""Sharding rules: logical axes -> mesh axes, parameter rules, activation
+constraints.
+
+The model code never names mesh axes directly; it asks for logical axes
+("dp", "tp", "fsdp", "seq") through a context.  Outside any context (CPU
+tests) every constraint is the identity, so the same model code runs on one
+device and on a 512-chip mesh.
+
+Default production mapping (see DESIGN.md §6):
+  dp    = ("pod", "data")   batch parallel (pods are pure DP)
+  fsdp  = "data"            parameter/optimizer sharding (intra-pod)
+  tp    = "model"           tensor parallel (heads / ff columns / vocab / EP)
+  seq   = "model"           sequence parallelism on the residual stream
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: Mesh
+    dp: tuple[str, ...] = ("data",)
+    fsdp: str | None = "data"
+    tp: str | tuple[str, ...] | None = "model"
+    seq_shard: bool = True  # sequence parallelism on residual stream
+
+    def resolve(self, logical: str | None):
+        if logical is None:
+            return None
+        if logical == "dp":
+            return self.dp or None
+        if logical == "fsdp":
+            return self.fsdp
+        if logical == "tp":
+            return self.tp
+        if logical == "seq":
+            return self.tp if self.seq_shard else None
+        raise ValueError(f"unknown logical axis {logical}")
+
+
+def make_decode_2d_ctx(mesh: Mesh) -> ShardCtx:
+    """Inference layout for dense models too large to data-replicate:
+    ALL mesh axes become one flat tensor-parallel axis (weights 256/512-way
+    sharded, never regathered), the KV cache seq-shards over the same flat
+    axis (flash-decode partials), batch replicated (decode activations are
+    tiny).  nemotron-340B decode: 73.8 GB/token-step of weight gathers
+    (fsdp layout) or 150 GB/device of replicated weights (1D inference
+    layout) -> 2.65 GB/device weights + ~GB of activation ARs (§Perf)."""
+    return ShardCtx(
+        mesh=mesh, dp=(), fsdp=None, tp=tuple(mesh.axis_names), seq_shard=True
+    )
+
+
+_local = threading.local()
+
+
+def current_ctx() -> ShardCtx | None:
+    return getattr(_local, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_ctx(ctx: ShardCtx | None):
+    prev = current_ctx()
+    _local.ctx = ctx
+    try:
+        yield
+    finally:
+        _local.ctx = prev
+
+
+def make_ctx(mesh: Mesh, *, seq_shard: bool = True) -> ShardCtx:
+    names = mesh.axis_names
+    dp = tuple(n for n in ("pod", "data") if n in names) or (names[0],)
+    tp = "model" if "model" in names else None
+    fsdp = "data" if "data" in names else None
+    return ShardCtx(mesh=mesh, dp=dp, fsdp=fsdp, tp=tp, seq_shard=seq_shard)
+
+
+def spec(*logical: str | None) -> P:
+    """Build a PartitionSpec from logical axis names under the current ctx."""
+    ctx = current_ctx()
+    if ctx is None:
+        return P()
+    return P(*(ctx.resolve(l) for l in logical))
+
+
+def _axis_prod(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    n = 1
+    for a in entry:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes from dims they don't divide (batch=1 decode, 49155-row
+    vocabs, 4-head state tensors...) — replicate those dims instead."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        out.append(entry if dim % _axis_prod(mesh, entry) == 0 else None)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
+    """with_sharding_constraint under the current ctx; identity without one.
+    Axes that don't divide the corresponding dim are dropped."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    spec = sanitize_spec(
+        P(*(ctx.resolve(l) for l in logical)), x.shape, ctx.mesh
+    )
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def tp_worthwhile(x_shape: tuple[int, ...], w_elems: int) -> bool:
+    """Should a layer force Megatron TP sharding on its activations?
+
+    Forcing TP keeps weights sharded (per-layer ZeRO-3 slice gathers) at the
+    price of per-layer activation all-reduces; leaving it to GSPMD lets
+    small-weight layers replicate weights with *no* activation collectives.
+    Napkin rule from the §Perf sweeps: constrain iff the layer's weight
+    elements exceed ~2x the per-device activation elements (nemotron train:
+    3.4B vs 0.15B -> constrain, 1.6x win; granite 32k-prefill: 67M vs 134M
+    -> leave free, recovers the 0.54x regression).
+    """
+    ctx = current_ctx()
+    if ctx is None:
+        return False
+    dp = 1
+    for a in ctx.dp:
+        dp *= ctx.mesh.shape[a]
+    tokens_dev = 1
+    for d in x_shape[:-1]:
+        tokens_dev *= d
+    tokens_dev = max(tokens_dev // dp, 1)
+    return w_elems > 2 * tokens_dev * x_shape[-1]
+
+
+def constrain_params(tree):
+    """Constrain every leaf of a parameter-shaped pytree (params, grads,
+    grad accumulators, sliced scan layers) to its rule sharding.  Two uses:
+
+      * inside the grad-accumulation body: without this, the fp32-cast
+        microbatch gradient is unconstrained and GSPMD materializes FULL
+        weight matrices (all-gather per layer per microbatch — measured
+        12.4 TB/step wire on nemotron-340B before the fix);
+      * on the sliced per-layer params inside scan bodies: tells GSPMD to
+        slice the stacked FSDP weights first and gather only the layer.
+    """
+    ctx = current_ctx()
+    if ctx is None:
+        return tree
+
+    def one(path, leaf):
+        names = tuple(
+            p.key if hasattr(p, "key") else str(getattr(p, "idx", p)) for p in path
+        )
+        logical = param_spec(names, leaf.ndim)
+        resolved = P(*(ctx.resolve(a) if isinstance(a, str) else a for a in logical))
+        spec = sanitize_spec(resolved, leaf.shape, ctx.mesh)
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(ctx.mesh, spec)
+        )
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (path-based).
+#
+# Conventions: 2D weights are sharded (fsdp, tp) with the contracting /
+# row dim on fsdp and the output/column dim on tp (Megatron column-parallel)
+# or flipped for the second matmul (row-parallel) so activations come back
+# with a single all-reduce.  MoE experts put the expert dim on tp (EP).
+# Stacked per-layer params carry a leading scan dim that is never sharded.
+# ---------------------------------------------------------------------------
+
+_RULES: list[tuple[str, tuple[str | None, ...]]] = [
+    # attention
+    ("wq", ("fsdp", "tp")),
+    ("wk", ("fsdp", "tp")),
+    ("wv", ("fsdp", "tp")),
+    ("wo", ("tp", "fsdp")),
+    ("bq", ("tp",)),
+    ("bk", ("tp",)),
+    ("bv", ("tp",)),
+    # dense mlp
+    ("w_gate", ("fsdp", "tp")),
+    ("w_in", ("fsdp", "tp")),
+    ("w_out", ("tp", "fsdp")),
+    # moe — training layout: experts over tp (compute is E-sharded, one
+    # token all-reduce per layer; measured cheapest for train/prefill where
+    # tokens >> expert bytes), rows FSDP over data.  The INFERENCE layout
+    # (see _EXPERT_INFERENCE below) flips to expert-stationary E-over-data
+    # with token all-to-all — 76x less decode wire (§Perf Cell B).
+    ("router", ("fsdp", None)),
+    ("e_gate", ("tp", "fsdp", None)),
+    ("e_in", ("tp", "fsdp", None)),
+    ("e_out", ("tp", None, "fsdp")),
+    # embeddings / head
+    ("embed", ("tp", "fsdp")),
+    ("lm_head", ("fsdp", "tp")),
+    # recurrent blocks: route big matrices like mlp, vectors replicated
+    ("w_x", ("fsdp", "tp")),
+    ("w_gate_branch", ("fsdp", "tp")),
+    ("w_rnn_out", ("tp", "fsdp")),
+    ("wi", ("fsdp", "tp")),
+    ("wf", ("fsdp", "tp")),
+    ("wz", ("fsdp", "tp")),
+    ("wo_gate", ("fsdp", "tp")),
+    ("up", ("fsdp", "tp")),
+    ("down", ("tp", "fsdp")),
+]
+
+
+_EXPERT_LEAVES = ("e_gate", "e_in", "e_out")
+# inference layout: experts stationary on the data axis, hidden on tp
+_EXPERT_INFERENCE = {
+    "e_gate": ("fsdp", None, "tp"),
+    "e_in": ("fsdp", None, "tp"),
+    "e_out": ("fsdp", "tp", None),
+}
+
+
+def param_spec(path: tuple[str, ...], ndim: int, *, inference: bool = False) -> P:
+    """PartitionSpec for a parameter leaf, given its tree path and rank.
+
+    The rule matches the last path component; a leading stacked-layer dim
+    (rank one higher than the rule) is left unsharded.
+
+    ``inference=True`` drops the fsdp axis from dense weights (decode pays a
+    per-layer ZeRO-3 all-gather per *token* otherwise — §Perf); expert
+    leaves keep it (there fsdp shards the expert dim, which is stationary
+    under the all-to-all dispatch).
+    """
+    name = path[-1]
+    for key, axes in _RULES:
+        if name == key:
+            if inference:
+                if name in _EXPERT_LEAVES:
+                    axes = _EXPERT_INFERENCE[name]
+                else:
+                    axes = tuple(None if a == "fsdp" else a for a in axes)
+            if ndim == len(axes):
+                return P(*axes)
+            if ndim == len(axes) + 1:  # stacked for scan
+                return P(None, *axes)
+            break
+    # norms, biases, gates, small vectors: replicated (possibly stacked)
+    return P(*([None] * ndim))
+
+
+def param_shardings(params, mesh: Mesh, ctx: ShardCtx, *, inference: bool = False):
+    """NamedSharding pytree for a parameter pytree (or ShapeDtypeStructs)."""
+
+    def one(path, leaf):
+        names = tuple(
+            p.key if hasattr(p, "key") else str(p.idx) if hasattr(p, "idx") else str(p)
+            for p in path
+        )
+        logical = param_spec(names, leaf.ndim, inference=inference)
+        resolved = P(*(ctx.resolve(a) if isinstance(a, str) else a for a in logical))
+        return NamedSharding(mesh, sanitize_spec(resolved, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, params)

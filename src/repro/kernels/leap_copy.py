@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: block gather/scatter by dynamic slot index — the
+physical-copy hot path of leap migration (the paper's ``memcpy`` analogue).
+
+On TPU the migration copy is: HBM(pool, scattered slots) -> VMEM -> HBM
+(contiguous staging buffer for the ICI ppermute), and the reverse on the
+destination.  Doing this with XLA gather/scatter materializes index vectors
+and gets poor HBM scheduling for large blocks; a Pallas kernel with
+*scalar-prefetched* slot indices streams one block per grid step with the
+block index feeding the BlockSpec index_map directly (double-buffered by the
+Pallas pipeline, so the HBM reads of block i+1 overlap the write of block i).
+
+Alignment guidance: the trailing payload dim should be a multiple of 128
+lanes and the row dim a multiple of 8 sublanes (fp32) / 16 (bf16) so DMA is
+tile-aligned; the shapes used by the serving/morsel pools respect this.
+
+Kernels are written for TPU and validated on CPU with ``interpret=True``
+(see tests/test_kernels_leap_copy.py); ``ops.py`` picks the implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(idx_ref, src_ref, dst_ref):
+    """One grid step moves one whole block (index_map did the addressing)."""
+    dst_ref[...] = src_ref[...]
+
+
+def _scatter_kernel(idx_ref, blocks_ref, pool_ref, out_ref):
+    # pool_ref is the aliased destination (read-ignored); untouched slots are
+    # preserved by the input/output aliasing.
+    del pool_ref
+    out_ref[...] = blocks_ref[...]
+
+
+def gather_blocks_pallas(
+    pool: jax.Array, idx: jax.Array, *, interpret: bool = False
+) -> jax.Array:
+    """Gather ``pool[idx]`` -> ``[K, *block]`` with one block per grid step.
+
+    pool: ``[S, r, d]`` region-local physical slots.
+    idx:  ``[K]`` int32 slot ids (scalar-prefetched; drive the index_map).
+    """
+    if pool.ndim != 3:
+        raise ValueError(f"pool must be [slots, rows, cols], got {pool.shape}")
+    s, r, d = pool.shape
+    k = idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, r, d), lambda i, idx_ref: (idx_ref[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, r, d), lambda i, idx_ref: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k, r, d), pool.dtype),
+        interpret=interpret,
+    )(idx, pool)
+
+
+def scatter_blocks_pallas(
+    pool: jax.Array, idx: jax.Array, blocks: jax.Array, *, interpret: bool = False
+) -> jax.Array:
+    """Scatter ``blocks`` into ``pool`` at slot ids ``idx`` (in-place via aliasing).
+
+    pool:   ``[S, r, d]`` (donated/aliased to the output — no pool copy).
+    idx:    ``[K]`` int32 destination slots; duplicate ids: last grid step wins
+            (TPU grid steps are sequential).
+    blocks: ``[K, r, d]``.
+    """
+    if pool.ndim != 3:
+        raise ValueError(f"pool must be [slots, rows, cols], got {pool.shape}")
+    s, r, d = pool.shape
+    k = idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, r, d), lambda i, idx_ref: (i, 0, 0)),  # src block i
+            pl.BlockSpec((1, r, d), lambda i, idx_ref: (idx_ref[i], 0, 0)),  # pool
+        ],
+        out_specs=pl.BlockSpec((1, r, d), lambda i, idx_ref: (idx_ref[i], 0, 0)),
+    )
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, r, d), pool.dtype),
+        # alias indices count every operand incl. scalar prefetch: pool is #2
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(idx, blocks, pool)
+
+
+def _copy_pool_kernel(src_idx_ref, dst_idx_ref, pool_ref, out_ref):
+    out_ref[...] = pool_ref[...]
+
+
+def copy_blocks_pallas(
+    pool: jax.Array,
+    src_idx: jax.Array,
+    dst_idx: jax.Array,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused intra-pool copy: ``pool[dst_idx[i]] = pool[src_idx[i]]``.
+
+    The same-region fast path of a migration (e.g. defragmentation or a
+    single-device test): one grid step reads slot ``src_idx[i]`` and writes
+    slot ``dst_idx[i]`` without a staging buffer.
+    """
+    if pool.ndim != 3:
+        raise ValueError(f"pool must be [slots, rows, cols], got {pool.shape}")
+    s, r, d = pool.shape
+    k = src_idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, r, d), lambda i, src_ref, dst_ref: (src_ref[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, r, d), lambda i, src_ref, dst_ref: (dst_ref[i], 0, 0)),
+    )
+    return pl.pallas_call(
+        _copy_pool_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, r, d), pool.dtype),
+        input_output_aliases={2: 0},  # pool aliased to output
+        interpret=interpret,
+    )(src_idx, dst_idx, pool)

@@ -1,0 +1,128 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: compiled Pallas on TPU, pure-jnp oracle elsewhere (CPU/GPU).
+Tests force ``impl="pallas_interpret"`` to execute the kernel bodies in
+Python on CPU and compare against the oracles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import leap_copy, paged_attn, ref
+
+
+def _auto_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _resolve(impl: str | None) -> tuple[str, bool]:
+    impl = impl or "auto"
+    if impl == "auto":
+        impl = _auto_impl()
+    if impl == "pallas_interpret":
+        return "pallas", True
+    return impl, False
+
+
+# -- leap_copy ---------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def gather_blocks(pool, idx, *, impl: str | None = None):
+    """``pool[idx]``: pack migration blocks into a contiguous staging buffer."""
+    kind, interp = _resolve(impl)
+    if kind == "pallas":
+        return leap_copy.gather_blocks_pallas(pool, idx, interpret=interp)
+    return ref.gather_blocks_ref(pool, idx)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",), donate_argnums=(0,))
+def scatter_blocks(pool, idx, blocks, *, impl: str | None = None):
+    """Unpack a staging buffer into pool slots (pool donated: in-place)."""
+    kind, interp = _resolve(impl)
+    if kind == "pallas":
+        return leap_copy.scatter_blocks_pallas(pool, idx, blocks, interpret=interp)
+    return ref.scatter_blocks_ref(pool, idx, blocks)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",), donate_argnums=(0,))
+def copy_blocks(pool, src_idx, dst_idx, *, impl: str | None = None):
+    """Intra-pool block copy (same-region migration fast path)."""
+    kind, interp = _resolve(impl)
+    if kind == "pallas":
+        return leap_copy.copy_blocks_pallas(pool, src_idx, dst_idx, interpret=interp)
+    return ref.copy_blocks_ref(pool, src_idx, dst_idx)
+
+
+# -- paged decode attention ----------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "kv_heads", "impl"))
+def paged_decode(
+    q,  # [B, H, hd]
+    kv_pool,  # [S, 2, BLK, KVH, hd]
+    tables,  # [B, MAXB]
+    lens,  # [B]
+    *,
+    kv_heads: int,
+    softcap: float = 0.0,
+    impl: str | None = None,
+):
+    """One decode step of paged attention; returns ``out [B, H, hd]``."""
+    out, _, _ = paged_decode_partial(
+        q, kv_pool, tables, lens, kv_heads=kv_heads, softcap=softcap, impl=impl
+    )
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "kv_heads", "impl"))
+def paged_decode_partial(
+    q,
+    kv_pool,
+    tables,
+    lens,
+    *,
+    kv_heads: int,
+    softcap: float = 0.0,
+    impl: str | None = None,
+):
+    """Paged decode returning flash partials ``(out, m, l)`` for shard combine."""
+    b, h, hd = q.shape
+    g = h // kv_heads
+    assert g * kv_heads == h, (h, kv_heads)
+    kind, interp = _resolve(impl)
+    # pad-position table entries must be valid slot ids for the index map
+    maxb = tables.shape[1]
+    blk = kv_pool.shape[2]
+    n_valid = (lens[:, None] + blk - 1) // blk
+    safe_tables = jnp.where(
+        jnp.arange(maxb)[None, :] < n_valid, tables, 0
+    ).astype(jnp.int32)
+    if kind == "pallas":
+        qg = q.reshape(b, kv_heads, g, hd)
+        out, m, l = paged_attn.paged_decode_pallas(
+            qg, kv_pool, safe_tables, lens, softcap=softcap, interpret=interp
+        )
+        return out.reshape(b, h, hd), m.reshape(b, h), l.reshape(b, h)
+    return ref.paged_decode_ref(q, kv_pool, safe_tables, lens, softcap=softcap)
+
+
+combine_partials = ref.combine_partials
+
+
+# -- RG-LRU scan -----------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk", "tile"))
+def lru_scan(a, b, h0, *, impl: str | None = None, chunk: int = 8, tile: int = 128):
+    """Blocked linear-recurrence scan (Griffin RG-LRU hot path)."""
+    from repro.kernels import lru_scan as lru_mod
+
+    kind, interp = _resolve(impl)
+    if kind == "pallas":
+        return lru_mod.lru_scan_pallas(a, b, h0, chunk=chunk, tile=tile, interpret=interp)
+    return ref.lru_scan_ref(a, b, h0)

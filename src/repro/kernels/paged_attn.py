@@ -1,0 +1,153 @@
+"""Pallas TPU kernel: paged flash-decode attention over a leap block table.
+
+This is the serving hot path that *reads through* the migration-managed
+indirection: the KV cache lives in a leap pool ``[S, 2, BLK, KVH, hd]`` and a
+per-sequence block table maps logical KV blocks to physical slots.  Because
+decode reads go through the same table the migrator flips, KV blocks can be
+leap-migrated between replicas while decode continues — reads before the
+flip hit the source slot, reads after hit the destination; appends mark
+in-flight blocks dirty.
+
+Kernel structure (one decode token per sequence):
+
+  grid = (B, KVH, MAXB)          b: sequence, h: kv head, j: table position
+  scalar prefetch: block table [B, MAXB] (drives the k/v BlockSpec index
+  maps — the same indirection trick as the leap_copy kernel) and lens [B].
+  VMEM scratch: fp32 running (acc[G,hd], m[G,1], l[G,1]) online softmax per
+  (b, h); the j loop is innermost so the scratch carries across a sequence's
+  blocks and is re-initialized at j == 0.
+
+Per grid step: one ``[G, hd] @ [hd, BLK]`` and one ``[G, BLK] @ [BLK, hd]``
+MXU matmul (G = H/KVH query-group size).  ``hd`` and ``BLK`` should be
+multiples of 128 lanes / 8 sublanes for full tiles (hd=192 runs at 1.5
+tiles).  Partial (out, m, l) are returned so sequence-sharded shards combine
+with a log-sum-exp merge (``ref.combine_partials``).
+
+Validated against ``ref.paged_decode_ref`` in interpret mode on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _decode_kernel(
+    tables_ref,
+    lens_ref,
+    q_ref,  # [1, 1, G, hd]
+    k_ref,  # [1, 1, BLK, 1, hd]
+    v_ref,  # [1, 1, BLK, 1, hd]
+    out_ref,  # [1, 1, G, hd]
+    mo_ref,  # [1, 1, G]
+    lo_ref,  # [1, 1, G]
+    acc_ref,  # VMEM [G, hd] f32
+    m_ref,  # VMEM [G, 1] f32
+    l_ref,  # VMEM [G, 1] f32
+    *,
+    blk: int,
+    softcap: float,
+    scale: float,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    maxb = pl.num_programs(2)
+    ln = lens_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(j * blk < ln)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # [G, hd]
+        k = k_ref[0, 0, :, 0, :].astype(jnp.float32)  # [BLK, hd]
+        v = v_ref[0, 0, :, 0, :].astype(jnp.float32)  # [BLK, hd]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [G, BLK]
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        pos = j * blk + jax.lax.broadcasted_iota(jnp.int32, (1, blk), 1)
+        s = jnp.where(pos < ln, s, NEG_INF)
+        m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))  # [G,1]
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)  # [G, BLK]
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [G, hd]
+        acc_ref[...] = acc_prev * alpha + pv
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(j == maxb - 1)
+    def _finish():
+        l = l_ref[...]
+        out_ref[0, 0] = (acc_ref[...] / l).astype(out_ref.dtype)
+        mo_ref[0, 0, :] = m_ref[:, 0]
+        lo_ref[0, 0, :] = l[:, 0]
+
+
+def paged_decode_pallas(
+    q: jax.Array,  # [B, KVH, G, hd]
+    kv_pool: jax.Array,  # [S, 2, BLK, KVH, hd]
+    tables: jax.Array,  # [B, MAXB] int32, pad entries must be valid slot ids
+    lens: jax.Array,  # [B] int32, >= 1
+    *,
+    softcap: float = 0.0,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns ``(out [B,KVH,G,hd], m [B,KVH,G], l [B,KVH,G])`` fp32 partials."""
+    b, kvh, g, hd = q.shape
+    s, two, blk, kvh2, hd2 = kv_pool.shape
+    assert two == 2 and kvh2 == kvh and hd2 == hd, (q.shape, kv_pool.shape)
+    maxb = tables.shape[1]
+    scale = 1.0 / (hd**0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, maxb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b, h, j, t, ln: (b, h, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, blk, 1, hd), lambda b, h, j, t, ln: (t[b, j], 0, 0, h, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, blk, 1, hd), lambda b, h, j, t, ln: (t[b, j], 1, 0, h, 0)
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b, h, j, t, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, g), lambda b, h, j, t, ln: (b, h, 0)),
+            pl.BlockSpec((1, 1, g), lambda b, h, j, t, ln: (b, h, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _decode_kernel, blk=blk, softcap=float(softcap), scale=float(scale)
+    )
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kvh, g, hd), q.dtype),
+            jax.ShapeDtypeStruct((b, kvh, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kvh, g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tables, lens, q, kv_pool, kv_pool)
+    return out, m, l

@@ -1,0 +1,34 @@
+"""Production meshes.  A function, not a module constant: importing this
+module must never touch jax device state (the dry-run sets
+``xla_force_host_platform_device_count`` before any jax initialization)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """Single pod: 256 chips (16, 16) = ("data", "model").
+    Multi-pod: 2 pods x 256 chips (2, 16, 16) = ("pod", "data", "model");
+    pods are pure data parallel (params replicate across pods, gradients
+    all-reduce over the pod axis)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_debug_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
+    """Small (data, model) mesh over however many devices exist (tests)."""
+    n = n_devices or len(jax.devices())
+    model = 1
+    for m in (4, 2, 1):
+        if n % m == 0:
+            model = m
+            break
+    return jax.make_mesh(
+        (n // model, model),
+        ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,220 @@
+"""Attention: GQA/MQA/MHA with RoPE, sliding windows, logit softcaps, QKV
+bias, and QK-norm — covering every assigned architecture's attention flavor.
+
+Three execution paths:
+  * train/prefill: query-chunked causal attention (``lax.scan`` over query
+    blocks) so the score matrix never materializes beyond
+    ``[B, KVH, G, chunk, Sk]`` — required for 32k prefill;
+  * decode: single-token attention against a contiguous cache (global
+    layers: length S_max; window layers: rolling buffer of length W).  KV
+    positions are sequence-sharded over the "seq" logical axis, partial
+    softmax reductions become a small all-reduce (flash-decode);
+  * paged decode (serving engine): the Pallas kernel in
+    ``repro.kernels.paged_attn`` reading through a leap block table.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain, tp_worthwhile
+from repro.models.common import apply_rope, dense_init, rms_norm, softcap
+
+
+# -- params -------------------------------------------------------------------
+
+
+def attn_init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    pd = cfg.pdtype()
+    p = {
+        "wq": dense_init(ks[0], (d, qd), pd),
+        "wk": dense_init(ks[1], (d, kvd), pd),
+        "wv": dense_init(ks[2], (d, kvd), pd),
+        "wo": dense_init(ks[3], (qd, d), pd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), pd)
+        p["bk"] = jnp.zeros((kvd,), pd)
+        p["bv"] = jnp.zeros((kvd,), pd)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((cfg.head_dim,), pd)
+        p["k_norm"] = jnp.zeros((cfg.head_dim,), pd)
+    return p
+
+
+def _project_qkv(x, params, cfg: ModelConfig, positions):
+    """x: [B,S,D] -> q [B,S,H,hd], k/v [B,S,KVH,hd] (RoPE applied)."""
+    b, s, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    # Megatron column-parallel: heads stay TP-sharded through attention.
+    # Without these constraints GSPMD loses the propagation at the reshape
+    # and falls back to fully-gathered (replicated) projection weights —
+    # measured 4x1.8 TB/device/step of weight all-gathers on nemotron-340B.
+    # Conditional on the weight-vs-activation cost model (small-weight
+    # layers at long prefill are better off replicated; §Perf).
+    w_elems = (
+        params["wq"].size + params["wk"].size + params["wv"].size + params["wo"].size
+    )
+    if tp_worthwhile(x.shape, w_elems):
+        q = constrain(q, "dp", None, "tp", None)
+        k = constrain(k, "dp", None, "tp", None)
+        v = constrain(v, "dp", None, "tp", None)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _scale(cfg: ModelConfig) -> float:
+    return cfg.attn_scale if cfg.attn_scale is not None else cfg.head_dim**-0.5
+
+
+# -- core: chunked causal attention --------------------------------------------
+
+
+def _attend(q_blk, k, v, q_pos, k_pos, cfg: ModelConfig, window: int):
+    """q_blk: [B,Cq,KVH,G,hd]; k/v: [B,Sk,KVH,hd]; positions int32 [Cq]/[Sk]."""
+    s = jnp.einsum(
+        "bqkgd,bskd->bkgqs",
+        q_blk.astype(jnp.float32) * _scale(cfg),
+        k.astype(jnp.float32),
+    )
+    s = softcap(s, cfg.attn_softcap)
+    mask = k_pos[None, :] <= q_pos[:, None]  # causal
+    if window:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    mask &= k_pos[None, :] >= 0  # rolling-cache slots not yet written
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.astype(q_blk.dtype)
+
+
+def causal_attention(q, k, v, cfg: ModelConfig, window: int = 0):
+    """Full causal (optionally windowed) attention, chunked over queries.
+
+    q: [B,S,H,hd]; k/v: [B,S,KVH,hd].  Returns [B,S,H,hd].
+    """
+    b, s, h, hd = q.shape
+    kvh = cfg.n_kv_heads
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd)
+    # largest divisor of s not exceeding attn_chunk: no padding, so no
+    # fully-masked softmax rows (whose NaNs would poison gradients)
+    chunk = next(d for d in range(min(cfg.attn_chunk, s), 0, -1) if s % d == 0)
+    n_chunks = s // chunk
+    qs = jnp.moveaxis(qg.reshape(b, n_chunks, chunk, kvh, g, hd), 1, 0)
+    starts = jnp.arange(n_chunks) * chunk
+    k_pos = jnp.arange(s)
+
+    def body(_, xs):
+        q_blk, start = xs
+        q_pos = start + jnp.arange(chunk)
+        if window:
+            # only the last (window + chunk) keys can be visible to this block
+            klen = min(window + chunk, s)
+            k_start = jnp.maximum(start + chunk - klen, 0)
+            k_blk = lax.dynamic_slice_in_dim(k, k_start, klen, axis=1)
+            v_blk = lax.dynamic_slice_in_dim(v, k_start, klen, axis=1)
+            kp = k_start + jnp.arange(klen)
+            o = _attend(q_blk, k_blk, v_blk, q_pos, kp, cfg, window)
+        else:
+            o = _attend(q_blk, k, v, q_pos, k_pos, cfg, window)
+        return None, o
+
+    _, outs = lax.scan(body, None, (qs, starts))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, -1, kvh, g, hd)[:, :s]
+    return out.reshape(b, s, h, hd)
+
+
+# -- layer-level entry points ---------------------------------------------------
+
+
+def attn_train(x, params, cfg: ModelConfig, window: int = 0):
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(x, params, cfg, positions)
+    out = causal_attention(q, k, v, cfg, window)
+    # keep the flattened head dim TP-sharded into the row-parallel wo matmul
+    # (sharding it "dp,seq,None" here forced a full gather of wo — iteration
+    # log in EXPERIMENTS.md §Perf); the residual constraint happens at the
+    # block level after wo.  Same cost-model condition as _project_qkv.
+    out = out.reshape(b, s, -1)
+    w_elems = (
+        params["wq"].size + params["wk"].size + params["wv"].size + params["wo"].size
+    )
+    if tp_worthwhile(x.shape, w_elems):
+        out = constrain(out, "dp", None, "tp")
+    return out @ params["wo"]
+
+
+def cache_len(cfg: ModelConfig, window: int, max_len: int) -> int:
+    return min(window, max_len) if window else max_len
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, window: int = 0):
+    t = cache_len(cfg, window, max_len)
+    shape = (batch, t, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, cfg.dtype()),
+        "v": jnp.zeros(shape, cfg.dtype()),
+    }
+
+
+def attn_prefill(x, params, cfg: ModelConfig, window: int = 0):
+    """Returns (out [B,S,D] @wo applied, cache dict) — cache holds RoPE'd keys."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(x, params, cfg, positions)
+    out = causal_attention(q, k, v, cfg, window)
+    out = out.reshape(b, s, -1) @ params["wo"]
+    t = cache_len(cfg, window, s)
+    if window and s > t:
+        # rolling layout: absolute position p lands in slot p % W
+        keep = jnp.arange(s - t, s)
+        slots = keep % t
+        ck = jnp.zeros((b, t) + k.shape[2:], k.dtype).at[:, slots].set(k[:, keep])
+        cv = jnp.zeros((b, t) + v.shape[2:], v.dtype).at[:, slots].set(v[:, keep])
+    else:
+        ck, cv = k, v
+    return out, {"k": ck, "v": cv}
+
+
+def attn_decode(x, params, cfg: ModelConfig, cache: dict, pos, window: int = 0):
+    """One decode step.  x: [B,1,D]; pos: scalar int32 (tokens already cached).
+
+    Returns (out [B,1,D], new cache).  The KV time axis may be sharded over
+    the "seq" logical axis: the softmax reductions become all-reduces.
+    """
+    b = x.shape[0]
+    t = cache["k"].shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(x, params, cfg, positions)
+    slot = pos % t if window else pos
+    ck = lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    j = jnp.arange(t)
+    if window:
+        # absolute position currently held by slot j (negative -> empty)
+        kpos = pos - jnp.mod(pos - j, t)
+    else:
+        kpos = j
+    kvh, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, 1, kvh, g, cfg.head_dim)
+    out = _attend(qg, ck, cv, positions[0], kpos, cfg, window)
+    out = out.reshape(b, 1, -1) @ params["wo"]
+    return out, {"k": ck, "v": cv}

@@ -1,0 +1,99 @@
+"""Shared model components: norms, RoPE, MLP variants, initializers.
+
+All math accumulates in fp32 where precision matters (norms, softmax) and
+casts back to the compute dtype; parameters are stored in ``param_dtype``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# -- rotary position embeddings ------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, n_heads, head_dim]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., : hd // 2], x32[..., hd // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+
+def mlp_forward(x: jax.Array, params: dict, kind: str) -> jax.Array:
+    """Dense FFN.  ``relu2`` is the squared-ReLU of Primer/Nemotron-4 (no gate).
+
+    params: gated kinds: {w_gate [D,F], w_in [D,F], w_out [F,D]};
+            ungated:     {w_in [D,F], w_out [F,D]}.
+    The hidden activation is constrained TP-sharded (Megatron column/row
+    parallel) so GSPMD never falls back to gathered weights — conditional on
+    the weight-vs-activation cost model (`tp_worthwhile`; §Perf).
+    """
+    from repro.distributed.sharding import constrain, tp_worthwhile
+
+    if kind in ("swiglu", "geglu"):
+        gate = x @ params["w_gate"]
+        act = jax.nn.silu(gate) if kind == "swiglu" else jax.nn.gelu(gate)
+        h = act * (x @ params["w_in"])
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(x @ params["w_in"]))
+    elif kind == "gelu":
+        h = jax.nn.gelu(x @ params["w_in"])
+    else:
+        raise ValueError(f"unknown mlp kind {kind}")
+    w_elems = sum(params[k].size for k in ("w_in", "w_out", "w_gate") if k in params)
+    if tp_worthwhile(x.shape, w_elems):
+        h = constrain(h, "dp", None, "tp")
+    return h @ params["w_out"]
+
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(k1, (d_model, d_ff), dtype),
+        "w_out": dense_init(k2, (d_ff, d_model), dtype, scale_axis=0),
+    }
+    if kind in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(k3, (d_model, d_ff), dtype)
+    return p
+
+
+def dense_init(key, shape, dtype, scale_axis: int = 0) -> jax.Array:
+    """Truncated-normal fan-in init (stddev 1/sqrt(fan_in))."""
+    fan_in = shape[scale_axis]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(
+        dtype
+    )
+
+
+def embed_init(key, shape, dtype) -> jax.Array:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)

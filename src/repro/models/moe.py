@@ -1,0 +1,114 @@
+"""Mixture-of-experts FFN: top-k token-choice routing with capacity buffers,
+einsum dispatch/combine (GShard/Switch style), expert-parallel over "tp".
+
+Covers dbrx (16e top-4) and qwen3-moe (128e top-8).  The one-hot dispatch
+formulation is the compile-robust baseline; replacing it with a sorted
+ragged dispatch is a §Perf hillclimb lever (see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import dense_init
+
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    mc = cfg.moe
+    ks = jax.random.split(key, 4)
+    d, f, e = cfg.d_model, mc.d_ff, mc.n_experts
+    pd = cfg.pdtype()
+    return {
+        "router": dense_init(ks[0], (d, e), jnp.float32),  # fp32 router
+        "e_gate": dense_init(ks[1], (e, d, f), pd),
+        "e_in": dense_init(ks[2], (e, d, f), pd),
+        "e_out": dense_init(ks[3], (e, f, d), pd, scale_axis=1),
+    }
+
+
+def capacity(mc: MoEConfig, n_tokens: int) -> int:
+    c = int(mc.capacity_factor * mc.top_k * n_tokens / mc.n_experts)
+    return max(c, 1)
+
+
+def route(gates: jax.Array, mc: MoEConfig, cap: int):
+    """Token-choice top-k routing with per-expert capacity.
+
+    gates: [T, E] fp32 softmax probabilities.
+    Returns (dispatch [T, E, C] bool, combine [T, E, C] fp32, aux_loss scalar).
+    Tokens overflowing an expert's capacity are dropped for that expert
+    (standard GShard semantics).
+    """
+    t, e = gates.shape
+    k = mc.top_k
+    topv, topi = jax.lax.top_k(gates, k)  # [T, k]
+    if mc.norm_topk:
+        topv = topv / (jnp.sum(topv, axis=-1, keepdims=True) + 1e-9)
+    sel = jax.nn.one_hot(topi, e, dtype=jnp.float32)  # [T, k, E]
+    # capacity positions: rank-major so earlier ranks win buffer slots
+    sel_flat = sel.transpose(1, 0, 2).reshape(k * t, e)
+    pos_flat = jnp.cumsum(sel_flat, axis=0) - sel_flat  # [k*T, E]
+    pos = pos_flat.reshape(k, t, e).transpose(1, 0, 2)  # [T, k, E]
+    keep = sel * (pos < cap)  # [T, k, E]
+    pos_oh = jax.nn.one_hot(
+        jnp.sum(pos * sel, axis=-1).astype(jnp.int32), cap, dtype=jnp.float32
+    )  # [T,k,C]
+    dispatch = jnp.einsum("tke,tkc->tec", keep, pos_oh)
+    combine = jnp.einsum("tke,tk,tkc->tec", keep, topv, pos_oh)
+    # load-balancing auxiliary loss (Switch): E * sum_e f_e * p_e
+    frac_tokens = jnp.mean(sel.sum(axis=1), axis=0)  # [E]
+    frac_probs = jnp.mean(gates, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return dispatch.astype(jnp.bool_), combine, aux
+
+
+def _pick_groups(t: int, target: int) -> int:
+    return next(g for g in range(min(target, t), 0, -1) if t % g == 0)
+
+
+def moe_ffn(x: jax.Array, params: dict, cfg: ModelConfig):
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar).
+
+    Grouped routing: tokens are split into ``moe.groups`` independent expert
+    groups (sharded over dp); capacity applies per group.  The dispatch/
+    combine tensors are then ``[G, T/G, E, C]`` with ``C ~ k·(T/G)·cf/E`` —
+    total size shrinks linearly in G, which is what makes 128-expert
+    training shapes compilable (DESIGN.md §6).
+    """
+    mc = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    g = _pick_groups(t, mc.groups)
+    xt = x.reshape(g, t // g, d)
+    xt = constrain(xt, "dp", None, None)
+    logits = xt.astype(jnp.float32) @ params["router"]
+    gates = jax.nn.softmax(logits, axis=-1)
+    cap = capacity(mc, t // g)
+    dispatch, combine, aux = jax.vmap(lambda gg: route(gg, mc, cap))(gates)
+    # dispatch tokens into per-expert buffers: [G, E, C, D]
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xt)
+    if mc.dispatch_mode == "tokens":
+        # expert-stationary: E sharded over data, the G->E reshard is an
+        # all-to-all of activations (decode: tokens << expert bytes)
+        xe = constrain(xe, None, "fsdp", None, None)
+        h = jax.nn.silu(
+            jnp.einsum("gecd,edf->gecf", xe, params["e_gate"])
+        ) * jnp.einsum("gecd,edf->gecf", xe, params["e_in"])
+        h = constrain(h, None, "fsdp", None, "tp")
+        ye = jnp.einsum("gecf,efd->gecd", h, params["e_out"])
+        ye = constrain(ye, None, "fsdp", None, None)
+    else:
+        # training layout: expert dim sharded over tp — expert compute is
+        # E-parallel, the combine reduces tokens over tp once per layer
+        # (cheapest when tokens >> expert bytes; §Perf iteration log)
+        xe = constrain(xe, "dp", "tp", None, None)
+        h = jax.nn.silu(
+            jnp.einsum("gecd,edf->gecf", xe, params["e_gate"])
+        ) * jnp.einsum("gecd,edf->gecf", xe, params["e_in"])
+        ye = jnp.einsum("gecf,efd->gecd", h, params["e_out"])
+        ye = constrain(ye, "dp", "tp", None, None)
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)
+    return y.reshape(b, s, d), jnp.mean(aux)

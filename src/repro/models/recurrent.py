@@ -1,0 +1,131 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block: dual-branch — x branch through a causal depthwise conv (width 4) into
+the RG-LRU gated linear recurrence, gate branch through GeLU; merged
+elementwise, projected back to d_model.
+
+The recurrence ``h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t ⊙ x_t)`` is linear in
+``h``, so prefill runs as a log-depth ``jax.lax.associative_scan`` over time
+(TPU-friendly), and decode is a single fused step.  State is fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+_C = 8.0  # Griffin's gate temperature
+
+
+def rglru_init(key, cfg: ModelConfig) -> dict:
+    d, r, w = cfg.d_model, cfg.rnn_width, cfg.conv_width
+    ks = jax.random.split(key, 7)
+    pd = cfg.pdtype()
+    # Λ init so a = σ(Λ)^c is spread over (0.9, 0.999) (Griffin appendix)
+    u = jax.random.uniform(ks[0], (r,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(u ** (1.0 / _C) / (1.0 - u ** (1.0 / _C)))
+    return {
+        "w_x": dense_init(ks[1], (d, r), pd),
+        "w_gate_branch": dense_init(ks[2], (d, r), pd),
+        "w_rnn_out": dense_init(ks[3], (r, d), pd),
+        "conv_w": dense_init(ks[4], (w, r), pd),
+        "conv_b": jnp.zeros((r,), pd),
+        "lam": lam,  # fp32
+        "wi": dense_init(ks[5], (r, r), pd),
+        "wr": dense_init(ks[6], (r, r), pd),
+        "bi": jnp.zeros((r,), jnp.float32),
+        "br": jnp.zeros((r,), jnp.float32),
+    }
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time.  x: [B,S,R]; w: [W,R]."""
+    width = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(x[:, :-i], ((0, 0), (i, 0), (0, 0)))
+        out = out + shifted * w[-1 - i]
+    return out + b
+
+
+def _gates(xc: jax.Array, params: dict):
+    """Recurrence weight a_t (log-space) and gated input, both fp32."""
+    x32 = xc.astype(jnp.float32)
+    r_t = jax.nn.sigmoid(x32 @ params["wr"].astype(jnp.float32) + params["br"])
+    i_t = jax.nn.sigmoid(x32 @ params["wi"].astype(jnp.float32) + params["bi"])
+    log_a = -_C * r_t * jax.nn.softplus(-params["lam"])  # log σ(Λ)^(c r_t)
+    a = jnp.exp(log_a)
+    gated_x = i_t * x32
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * gated_x
+
+
+def rglru_scan(xc: jax.Array, params: dict, h0: jax.Array | None = None):
+    """Run the RG-LRU over a sequence.  xc: [B,S,R] (post-conv).
+
+    Returns (y [B,S,R] in xc.dtype, h_last [B,R] fp32).
+    """
+    a, bx = _gates(xc, params)  # [B,S,R] fp32
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h.astype(xc.dtype), h[:, -1]
+
+
+def rglru_step(xc: jax.Array, params: dict, h: jax.Array):
+    """One decode step.  xc: [B,1,R]; h: [B,R] fp32 -> (y [B,1,R], h')."""
+    a, bx = _gates(xc, params)
+    h_new = a[:, 0] * h + bx[:, 0]
+    return h_new[:, None].astype(xc.dtype), h_new
+
+
+def init_rec_cache(cfg: ModelConfig, batch: int):
+    r, w = cfg.rnn_width, cfg.conv_width
+    return {
+        "conv": jnp.zeros((batch, w - 1, r), cfg.dtype()),
+        "h": jnp.zeros((batch, r), jnp.float32),
+    }
+
+
+def rec_block_train(x: jax.Array, params: dict, cfg: ModelConfig):
+    """Full-sequence forward (training/prefill body without cache)."""
+    z = x @ params["w_x"]
+    gate = jax.nn.gelu(x @ params["w_gate_branch"])
+    zc = causal_conv(z, params["conv_w"], params["conv_b"])
+    y, _ = rglru_scan(zc, params)
+    return (y * gate) @ params["w_rnn_out"]
+
+
+def rec_block_prefill(x: jax.Array, params: dict, cfg: ModelConfig):
+    z = x @ params["w_x"]
+    gate = jax.nn.gelu(x @ params["w_gate_branch"])
+    zc = causal_conv(z, params["conv_w"], params["conv_b"])
+    y, h_last = rglru_scan(zc, params)
+    out = (y * gate) @ params["w_rnn_out"]
+    w = cfg.conv_width
+    tail = z[:, -(w - 1) :]
+    if tail.shape[1] < w - 1:  # S < conv window: left-pad
+        tail = jnp.pad(tail, ((0, 0), (w - 1 - tail.shape[1], 0), (0, 0)))
+    return out, {"conv": tail, "h": h_last}
+
+
+def rec_block_decode(x: jax.Array, params: dict, cfg: ModelConfig, cache: dict):
+    """x: [B,1,D] -> (out [B,1,D], new cache)."""
+    z = x @ params["w_x"]  # [B,1,R]
+    gate = jax.nn.gelu(x @ params["w_gate_branch"])
+    w = params["conv_w"]
+    hist = jnp.concatenate([cache["conv"], z], axis=1)  # [B,W,R]
+    zc = jnp.einsum("bwr,wr->br", hist.astype(jnp.float32), w.astype(jnp.float32))
+    zc = (zc + params["conv_b"].astype(jnp.float32))[:, None].astype(z.dtype)
+    y, h_new = rglru_step(zc, params, cache["h"])
+    out = (y * gate) @ params["w_rnn_out"]
+    return out, {"conv": hist[:, 1:], "h": h_new}

@@ -1,0 +1,316 @@
+"""xLSTM blocks: mLSTM (matrix memory, exponential gating) and sLSTM
+(scalar memory, per-head recurrent gating) — arXiv:2405.04517.
+
+Both cells run as ``lax.scan`` over time with fp32, max-stabilized gate
+states (m_t).  The sequential scan is the faithful baseline; a chunkwise-
+parallel mLSTM is a §Perf lever (the roofline table shows the train_4k cell
+is latency-bound by the time scan).
+
+Block structure (paper appendix):
+  mLSTM block: LN -> up-proj (pf=2) to (z, gate); causal conv4 on z; q,k
+    from conv output, v from z; per-head mLSTM cell; out = cell ⊙ SiLU(gate);
+    down-proj. Self-contained expansion (no separate FFN; d_ff=0).
+  sLSTM block: LN -> causal conv4 -> cell (4 heads, block-diag recurrence)
+    -> out-proj; then LN -> GeGLU MLP (pf 4/3 * 2) as in the paper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, rms_norm
+from repro.models.recurrent import causal_conv
+
+N_HEADS = 4  # xLSTM-125M uses 4 heads for both cell types
+_CHUNK = 64  # chunkwise-parallel mLSTM chunk length (sequential below 2x)
+
+
+# =============================================================================
+# mLSTM
+# =============================================================================
+
+
+def mlstm_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    r = 2 * d  # up-projection factor 2
+    ks = jax.random.split(key, 9)
+    pd = cfg.pdtype()
+    return {
+        "up": dense_init(ks[0], (d, 2 * r), pd),  # z and gate branches
+        "conv_w": dense_init(ks[1], (cfg.conv_width, r), pd),
+        "conv_b": jnp.zeros((r,), pd),
+        "wq": dense_init(ks[2], (r, r), pd),
+        "wk": dense_init(ks[3], (r, r), pd),
+        "wv": dense_init(ks[4], (r, r), pd),
+        "wi": dense_init(ks[5], (r, N_HEADS), jnp.float32),
+        "wf": dense_init(ks[6], (r, N_HEADS), jnp.float32),
+        "bi": jnp.zeros((N_HEADS,), jnp.float32),
+        "bf": jnp.full((N_HEADS,), 3.0, jnp.float32),  # forget-open init
+        "down": dense_init(ks[7], (r, d), pd),
+        "skip": dense_init(ks[8], (r, r), pd),
+    }
+
+
+def _mlstm_cell_step(state, inputs):
+    """state: (C [B,H,hd,hd], n [B,H,hd], m [B,H]); one timestep (fp32)."""
+    c, n, m = state
+    q, k, v, logi, logf = inputs  # q/k/v: [B,H,hd]; logi/logf: [B,H]
+    m_new = jnp.maximum(logf + m, logi)
+    i_p = jnp.exp(logi - m_new)[..., None]  # [B,H,1]
+    f_p = jnp.exp(logf + m - m_new)[..., None]
+    c_new = f_p[..., None] * c + i_p[..., None] * (v[..., :, None] * k[..., None, :])
+    n_new = f_p * n + i_p * k
+    denom = jnp.maximum(jnp.abs(jnp.sum(n_new * q, axis=-1)), 1.0)  # [B,H]
+    h = jnp.einsum("bhij,bhj->bhi", c_new, q) / denom[..., None]
+    return (c_new, n_new, m_new), h
+
+
+def mlstm_cell(q, k, v, logi, logf, state):
+    """Scan the cell over time.  q/k/v: [B,S,H,hd] fp32; gates [B,S,H].
+
+    Returns (h [B,S,H,hd], final state).
+    """
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, logi, logf))
+    state, hs = lax.scan(_mlstm_cell_step, state, xs)
+    return jnp.moveaxis(hs, 0, 1), state
+
+
+def mlstm_cell_chunked(q, k, v, logi, logf, state, chunk: int = 64):
+    """Chunkwise-parallel mLSTM: algebraically identical to ``mlstm_cell``
+    but with serial depth S/chunk instead of S (within-chunk work is two
+    [L,L] x [L,hd] matmuls per head — MXU-parallel, GLA/mLSTM-chunkwise
+    style).  The max-stabilizer recurrence m_t = max(logf_t + m_{t-1},
+    logi_t) expands to ``max(m_prev + b_t, cummax_j<=t(b_t - b_j + logi_j))``
+    with b = within-chunk cumsum(logf), so stabilization matches the
+    sequential cell exactly in exact arithmetic (tests assert fp32
+    agreement).  §Perf: drops the xlstm train_4k serial depth 4096 -> 64.
+    """
+    b_, s, h, hd = q.shape
+    L = next(d for d in range(min(chunk, s), 0, -1) if s % d == 0)
+    nc = s // L
+
+    def split(t):
+        return jnp.moveaxis(
+            t.reshape(b_, nc, L, *t.shape[2:]), 1, 0
+        )  # [NC, B, L, ...]
+
+    qs, ks, vs, lis, lfs = map(split, (q, k, v, logi, logf))
+
+    def body(carry, xs):
+        c_prev, n_prev, m_prev = carry  # [B,H,hd,hd], [B,H,hd], [B,H]
+        qc, kc, vc, lic, lfc = xs  # [B,L,H,*]
+        b = jnp.cumsum(lfc, axis=1)  # [B,L,H] cumulative log-forget
+        g = lic - b  # [B,L,H]
+        gmax = lax.cummax(g, axis=1)
+        m_t = jnp.maximum(m_prev[:, None] + b, b + gmax)  # [B,L,H]
+        inter = jnp.exp(m_prev[:, None] + b - m_t)  # [B,L,H]
+        # stabilized intra-chunk weights: logS[t,j] = b_t - m_t + g_j (j<=t)
+        logS = (b - m_t)[:, :, None] + g[:, None, :]  # [B,L,L,H]
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        Sw = jnp.where(mask[None, :, :, None], jnp.exp(logS), 0.0)
+        scores = jnp.einsum("bthd,bjhd->btjh", qc, kc)
+        A = Sw * scores
+        num = jnp.einsum("btjh,bjhd->bthd", A, vc)
+        # inter-chunk readout: C[b,h,d,e] has d=v-dim, e=k-dim; q lives in
+        # k-space, so contract over e
+        num = num + jnp.einsum("bhde,bthe->bthd", c_prev, qc) * inter[..., None]
+        n_t = n_prev[:, None] * inter[..., None] + jnp.einsum(
+            "btjh,bjhd->bthd", Sw, kc
+        )
+        denom = jnp.maximum(jnp.abs(jnp.sum(n_t * qc, axis=-1)), 1.0)
+        h_out = num / denom[..., None]
+        # carry to chunk end (position L-1)
+        b_tot = b[:, -1]  # [B,H]
+        m_end = m_t[:, -1]
+        carry_scale = jnp.exp(m_prev + b_tot - m_end)  # [B,H]
+        w_j = jnp.exp((b_tot - m_end)[:, None] + g)  # [B,L,H]
+        c_new = c_prev * carry_scale[..., None, None] + jnp.einsum(
+            "bjh,bjhd,bjhe->bhde", w_j, vc, kc
+        )
+        n_new = n_prev * carry_scale[..., None] + jnp.einsum("bjh,bjhd->bhd", w_j, kc)
+        return (c_new, n_new, m_end), h_out
+
+    state, hs = lax.scan(body, state, (qs, ks, vs, lis, lfs))
+    return jnp.moveaxis(hs, 0, 1).reshape(b_, s, h, hd), state
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    r = 2 * d
+    hd = r // N_HEADS
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, r), cfg.dtype()),
+        "c": jnp.zeros((batch, N_HEADS, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, N_HEADS, hd), jnp.float32),
+        "m": jnp.full((batch, N_HEADS), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_qkv(z, zc, params):
+    b, s, r = z.shape
+    hd = r // N_HEADS
+    scale = hd**-0.5
+    q = (zc @ params["wq"]).reshape(b, s, N_HEADS, hd).astype(jnp.float32) * scale
+    k = (zc @ params["wk"]).reshape(b, s, N_HEADS, hd).astype(jnp.float32) * (hd**-0.5)
+    v = (z @ params["wv"]).reshape(b, s, N_HEADS, hd).astype(jnp.float32)
+    logi = zc.astype(jnp.float32) @ params["wi"] + params["bi"]
+    logf = jax.nn.log_sigmoid(zc.astype(jnp.float32) @ params["wf"] + params["bf"])
+    return q, k, v, logi, logf
+
+
+def mlstm_block(x, params, cfg: ModelConfig, cache: dict | None = None, *, mode: str):
+    """mode: train | prefill | decode.  x: [B,S,D] ([B,1,D] for decode)."""
+    b, s, d = x.shape
+    r = 2 * d
+    zg = x @ params["up"]
+    z, gate = zg[..., :r], zg[..., r:]
+    if mode == "decode":
+        hist = jnp.concatenate([cache["conv"], z], axis=1)
+        zc32 = jnp.einsum(
+            "bwr,wr->br", hist.astype(jnp.float32), params["conv_w"].astype(jnp.float32)
+        )
+        zc = (zc32 + params["conv_b"].astype(jnp.float32))[:, None].astype(z.dtype)
+        q, k, v, logi, logf = _mlstm_qkv(z, zc, params)
+        state = (cache["c"], cache["n"], cache["m"])
+        state, h1 = _mlstm_cell_step(state, (q[:, 0], k[:, 0], v[:, 0], logi[:, 0], logf[:, 0]))
+        h = h1[:, None]
+        new_cache = {"conv": hist[:, 1:], "c": state[0], "n": state[1], "m": state[2]}
+    else:
+        zc = causal_conv(z, params["conv_w"], params["conv_b"])
+        q, k, v, logi, logf = _mlstm_qkv(z, zc, params)
+        if cache is not None:  # continue from prior state (prefill w/ history)
+            state = (cache["c"], cache["n"], cache["m"])
+        else:
+            hd = r // N_HEADS
+            state = (
+                jnp.zeros((b, N_HEADS, hd, hd), jnp.float32),
+                jnp.zeros((b, N_HEADS, hd), jnp.float32),
+                jnp.full((b, N_HEADS), -1e30, jnp.float32),
+            )
+        if s >= 2 * _CHUNK:
+            h, state = mlstm_cell_chunked(q, k, v, logi, logf, state, _CHUNK)
+        else:
+            h, state = mlstm_cell(q, k, v, logi, logf, state)
+        w = cfg.conv_width
+        tail = z[:, -(w - 1) :]
+        if tail.shape[1] < w - 1:
+            tail = jnp.pad(tail, ((0, 0), (w - 1 - tail.shape[1], 0), (0, 0)))
+        new_cache = {"conv": tail, "c": state[0], "n": state[1], "m": state[2]}
+    hr = h.reshape(b, h.shape[1], r).astype(x.dtype) + zc @ params["skip"]
+    out = (hr * jax.nn.silu(gate)) @ params["down"]
+    if mode == "train":
+        return out
+    return out, new_cache
+
+
+# =============================================================================
+# sLSTM
+# =============================================================================
+
+
+def slstm_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    hd = d // N_HEADS
+    ks = jax.random.split(key, 12)
+    pd = cfg.pdtype()
+    f_up = int(d * 4 / 3)
+    p = {
+        "conv_w": dense_init(ks[0], (cfg.conv_width, d), pd),
+        "conv_b": jnp.zeros((d,), pd),
+        "wi": dense_init(ks[1], (d, d), jnp.float32),
+        "wf": dense_init(ks[2], (d, d), jnp.float32),
+        "wz": dense_init(ks[3], (d, d), jnp.float32),
+        "wo_gate": dense_init(ks[4], (d, d), jnp.float32),
+        "bi": jnp.zeros((d,), jnp.float32),
+        "bf": jnp.full((d,), 3.0, jnp.float32),
+        "bz": jnp.zeros((d,), jnp.float32),
+        "bo": jnp.zeros((d,), jnp.float32),
+        # block-diagonal per-head recurrence
+        "ri": dense_init(ks[5], (N_HEADS, hd, hd), jnp.float32, scale_axis=1),
+        "rf": dense_init(ks[6], (N_HEADS, hd, hd), jnp.float32, scale_axis=1),
+        "rz": dense_init(ks[7], (N_HEADS, hd, hd), jnp.float32, scale_axis=1),
+        "ro": dense_init(ks[8], (N_HEADS, hd, hd), jnp.float32, scale_axis=1),
+        "out_proj": dense_init(ks[9], (d, d), pd),
+        "up": dense_init(ks[10], (d, 2 * f_up), pd),
+        "down": dense_init(ks[11], (f_up, d), pd),
+    }
+    return p
+
+
+def _rec(h, r):
+    """Per-head recurrent contribution: h [B,d] x r [H,hd,hd] -> [B,d]."""
+    b, d = h.shape
+    hd = d // N_HEADS
+    hh = h.reshape(b, N_HEADS, hd)
+    return jnp.einsum("bhi,hij->bhj", hh, r).reshape(b, d)
+
+
+def _slstm_cell_step(params, state, x_t):
+    """state: (c, n, m, h) each [B,d] fp32; x_t: [B,d] fp32 (post-conv)."""
+    c, n, m, h = state
+    raw_i = x_t @ params["wi"] + params["bi"] + _rec(h, params["ri"])
+    raw_f = x_t @ params["wf"] + params["bf"] + _rec(h, params["rf"])
+    raw_z = x_t @ params["wz"] + params["bz"] + _rec(h, params["rz"])
+    raw_o = x_t @ params["wo_gate"] + params["bo"] + _rec(h, params["ro"])
+    logf = jax.nn.log_sigmoid(raw_f)
+    m_new = jnp.maximum(logf + m, raw_i)
+    i_p = jnp.exp(raw_i - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(raw_z)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(raw_o) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d), cfg.dtype()),
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def slstm_block(x, params, cfg: ModelConfig, cache: dict | None = None, *, mode: str):
+    b, s, d = x.shape
+    if mode == "decode":
+        hist = jnp.concatenate([cache["conv"], x], axis=1)
+        xc32 = jnp.einsum(
+            "bwr,wr->br", hist.astype(jnp.float32), params["conv_w"].astype(jnp.float32)
+        ) + params["conv_b"].astype(jnp.float32)
+        state = (cache["c"], cache["n"], cache["m"], cache["h"])
+        state, h1 = _slstm_cell_step(params, state, xc32)
+        hs = h1[:, None]
+        new_cache = {"conv": hist[:, 1:], "c": state[0], "n": state[1], "m": state[2], "h": state[3]}
+    else:
+        xc = causal_conv(x, params["conv_w"], params["conv_b"]).astype(jnp.float32)
+        if cache is not None:
+            state = (cache["c"], cache["n"], cache["m"], cache["h"])
+        else:
+            z = jnp.zeros((b, d), jnp.float32)
+            state = (z, z, jnp.full((b, d), -1e30, jnp.float32), z)
+        state, hs = lax.scan(
+            lambda st, xt: _slstm_cell_step(params, st, xt), state, jnp.moveaxis(xc, 1, 0)
+        )
+        hs = jnp.moveaxis(hs, 0, 1)
+        w = cfg.conv_width
+        tail = x[:, -(w - 1) :]
+        if tail.shape[1] < w - 1:
+            tail = jnp.pad(tail, ((0, 0), (w - 1 - tail.shape[1], 0), (0, 0)))
+        new_cache = {"conv": tail, "c": state[0], "n": state[1], "m": state[2], "h": state[3]}
+    cell_out = hs.astype(x.dtype) @ params["out_proj"]
+    # feed-forward sub-block (GeGLU, pf 4/3)
+    y = x + cell_out  # residual around the cell
+    f_up = params["down"].shape[0]
+    uz = y @ params["up"]
+    u, g = uz[..., :f_up], uz[..., f_up:]
+    ff = (jax.nn.gelu(g) * u) @ params["down"]
+    out = ff + cell_out  # block returns delta (residual added by caller)
+    if mode == "train":
+        return out
+    return out, new_cache

@@ -1,0 +1,235 @@
+"""Parse collective traffic out of post-SPMD compiled HLO text.
+
+``compiled.cost_analysis()`` has no collective-bytes entry, so we regex the
+HLO for ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all``
+/ ``collective-permute`` ops, take each op's *result* shape, recover the
+participant group size from ``replica_groups`` (both explicit ``{{0,1},..}``
+and iota ``[8,2]<=[16]`` forms), and convert to estimated wire bytes per
+device using ring-algorithm factors:
+
+  all-gather          result x (g-1)/g      (each device receives g-1 shards)
+  all-reduce          result x 2(g-1)/g     (reduce-scatter + all-gather)
+  reduce-scatter      result x (g-1)        (operand = result x g)
+  all-to-all          result x (g-1)/g
+  collective-permute  result x 1            (point-to-point)
+
+These are the standard ring lower bounds; absolute numbers are estimates,
+but they are *consistent* across configurations, which is what the §Perf
+iteration needs (before/after on the same op set).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g.:  %all-reduce.1 = f32[16,512]{1,0} all-reduce(f32[16,512]{1,0} %x), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?(\w+)\[([\d,]*)\][^\s]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[([\d,]+)\]<=\[")
+_SOURCE_TARGET_RE = re.compile(r"source_target_pairs=\{")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    dtype: str
+    shape: tuple[int, ...]
+    group_size: int
+    result_bytes: int
+    wire_bytes: int
+
+
+def _wire_factor(kind: str, g: int) -> float:
+    if g <= 1:
+        return 0.0 if kind != "collective-permute" else 1.0
+    if kind == "all-gather":
+        return (g - 1) / g
+    if kind == "all-reduce":
+        return 2 * (g - 1) / g
+    if kind == "reduce-scatter":
+        return float(g - 1)
+    if kind == "all-to-all":
+        return (g - 1) / g
+    if kind == "collective-permute":
+        return 1.0
+    return 1.0
+
+
+def parse_collectives(hlo_text: str) -> list[CollectiveOp]:
+    ops = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+        elems = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        nbytes = elems * _DTYPE_BYTES[dtype]
+        g = _parse_group_size(line)
+        ops.append(
+            CollectiveOp(
+                kind=kind,
+                dtype=dtype,
+                shape=shape,
+                group_size=g,
+                result_bytes=nbytes,
+                wire_bytes=int(nbytes * _wire_factor(kind, g)),
+            )
+        )
+    return ops
+
+
+def _parse_group_size(line: str) -> int:
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        dims = [int(x) for x in m.group(1).split(",")]
+        # iota form [a,b,...]<=[n]: groups are the trailing dims product
+        # after the leading "number of groups" dim
+        return int(np.prod(dims[1:], dtype=np.int64)) if len(dims) > 1 else dims[0]
+    if _SOURCE_TARGET_RE.search(line):
+        return 2  # permute pair
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Trip-count-aware accounting.
+#
+# XLA cost analysis (and a naive text scan) counts a while-loop body ONCE,
+# but a scanned 96-layer model executes its body 96 times.  We split the HLO
+# module into computations, find every `while`, recover the trip count from
+# the loop condition's comparison constant, and multiply the collectives in
+# each body by the product of enclosing trip counts.
+# ---------------------------------------------------------------------------
+
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALLSITE_RE = re.compile(
+    r"(?:to_apply|true_computation|false_computation)=%?([\w\.\-]+)"
+)
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def split_computations(hlo_text: str) -> tuple[dict[str, str], str | None]:
+    """Returns ({name: body_text}, entry_name)."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HEADER_RE.match(line.strip()) if "{" in line or "->" in line else None
+        if m and not line.startswith(" "):
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return {k: "\n".join(v) for k, v in comps.items()}, entry
+
+
+def _trip_count(cond_text: str) -> int:
+    consts = [int(c) for c in _CONST_RE.findall(cond_text)]
+    return max(consts) if consts else 1
+
+
+def computation_multiplicities(hlo_text: str) -> dict[str, float]:
+    """name -> how many times the computation executes per step."""
+    comps, entry = split_computations(hlo_text)
+    if entry is None:
+        return {name: 1.0 for name in comps}
+    mult: dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        body = comps[name]
+        for w in _WHILE_RE.finditer(body):
+            cond, wbody = w.group(1), w.group(2)
+            trips = _trip_count(comps.get(cond, ""))
+            visit(cond, m * (trips + 1))
+            visit(wbody, m * trips)
+        for c in _CALLSITE_RE.finditer(body):
+            if c.group(1) not in mult:  # avoid double-visiting reduce bodies
+                visit(c.group(1), m)
+        for b in _BRANCHES_RE.finditer(body):
+            for name2 in b.group(1).split(","):
+                visit(name2.strip().lstrip("%"), m)
+
+    visit(entry, 1.0)
+    return mult
+
+
+def scaled_wire_bytes(hlo_text: str) -> dict:
+    """Trip-count-scaled collective accounting for a compiled module."""
+    comps, entry = split_computations(hlo_text)
+    mult = computation_multiplicities(hlo_text)
+    per_comp = {}
+    total = 0.0
+    raw_total = 0.0
+    by_kind: dict[str, float] = {}
+    top: list[dict] = []
+    for name, body in comps.items():
+        ops = parse_collectives(body)
+        if not ops:
+            continue
+        m = mult.get(name, 1.0)
+        wire = sum(o.wire_bytes for o in ops)
+        per_comp[name] = {"mult": m, "wire_bytes": wire}
+        total += m * wire
+        raw_total += wire
+        for o in ops:
+            by_kind[o.kind] = by_kind.get(o.kind, 0.0) + m * o.wire_bytes
+            top.append(
+                {
+                    "kind": o.kind,
+                    "dtype": o.dtype,
+                    "shape": list(o.shape),
+                    "group": o.group_size,
+                    "mult": m,
+                    "scaled_wire_bytes": m * o.wire_bytes,
+                }
+            )
+    top.sort(key=lambda d: -d["scaled_wire_bytes"])
+    return {
+        "wire_bytes_scaled": total,
+        "wire_bytes_raw": raw_total,
+        "by_kind_scaled": by_kind,
+        "computations": per_comp,
+        "top_ops": top[:12],
+    }
+
+
+def summarize(ops: list[CollectiveOp]) -> dict:
+    by_kind: dict[str, dict] = {}
+    for op in ops:
+        d = by_kind.setdefault(op.kind, {"count": 0, "result_bytes": 0, "wire_bytes": 0})
+        d["count"] += 1
+        d["result_bytes"] += op.result_bytes
+        d["wire_bytes"] += op.wire_bytes
+    total = sum(d["wire_bytes"] for d in by_kind.values())
+    return {"by_kind": by_kind, "wire_bytes": total, "n_ops": len(ops)}

@@ -1,0 +1,79 @@
+"""Roofline model for TPU v5e (the target hardware).
+
+Three terms per (arch x shape x mesh) cell, all derived from the compiled
+dry-run artifact (per-device post-SPMD numbers):
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = wire_bytes_per_device / ICI_BW
+
+plus MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) and the usefulness
+ratio MODEL_FLOPS / (HLO_FLOPs x chips) that catches remat/dispatch waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (~per-chip effective for ring collectives)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    model_flops: float  # 6·N·D for the whole step, all chips
+    n_chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap estimate: max of the three (perfectly overlapped)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total_hlo = self.flops_per_device * self.n_chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the bound: useful
+        model FLOPs / (chips x peak x step_time) — the MFU the compiled
+        program would reach if it ran exactly at its dominant bound."""
+        denom = self.n_chips * PEAK_FLOPS * self.step_time_s
+        return self.model_flops / denom if denom else 0.0
+
+
+def terms_from_artifact(art: dict) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=art["flops_per_device"] / PEAK_FLOPS,
+        memory_s=art["bytes_per_device"] / HBM_BW,
+        collective_s=art["wire_bytes_per_device"] / ICI_BW,
+        flops_per_device=art["flops_per_device"],
+        bytes_per_device=art["bytes_per_device"],
+        wire_bytes_per_device=art["wire_bytes_per_device"],
+        model_flops=art["model_flops"],
+        n_chips=art["n_chips"],
+    )
+
+
+def model_flops(n_params_active: int, n_tokens: int, kind: str) -> float:
+    """6·N·D for training; 2·N·D for a forward-only step (prefill/decode)."""
+    if kind == "train":
+        return 6.0 * n_params_active * n_tokens
+    return 2.0 * n_params_active * n_tokens

@@ -1,0 +1,126 @@
+"""Generate §Dry-run / §Roofline markdown tables from the dry-run artifacts.
+
+    PYTHONPATH=src python -m repro.roofline.report [--mesh pod] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs.base import ARCH_IDS
+from repro.configs.shapes import SHAPES
+from repro.roofline.model import terms_from_artifact
+
+ART_DIR = os.path.abspath(
+    os.environ.get(
+        "DRYRUN_ART_DIR",
+        os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun"),
+    )
+)
+
+
+def load(mesh: str) -> dict[tuple[str, str], dict]:
+    out = {}
+    for p in glob.glob(os.path.join(ART_DIR, mesh, "*.json")):
+        with open(p) as f:
+            a = json.load(f)
+        out[(a["arch"], a["shape"])] = a
+    return out
+
+
+def fmt_bytes(n: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def dryrun_table(mesh: str) -> str:
+    arts = load(mesh)
+    lines = [
+        f"### Mesh `{mesh}`",
+        "",
+        "| arch | shape | status | lower+compile (s) | bytes/device | n_micro |",
+        "|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_IDS + ("leap_migration",):
+        shapes = SHAPES if arch != "leap_migration" else {"xla": None, "ppermute": None}
+        for shape in shapes:
+            a = arts.get((arch, shape))
+            if a is None:
+                continue
+            status = a.get("status", "?")
+            if status != "OK":
+                lines.append(f"| {arch} | {shape} | {status} | - | - | - |")
+                continue
+            mem = a["memory"]["per_device_total"]
+            lines.append(
+                f"| {arch} | {shape} | OK | {a['lower_s'] + a['compile_s']:.1f} "
+                f"| {fmt_bytes(mem)} | {a.get('n_micro', '-')} |"
+            )
+    return "\n".join(lines)
+
+
+def roofline_table(mesh: str) -> str:
+    arts = load(mesh)
+    lines = [
+        f"### Mesh `{mesh}` — roofline terms (per step)",
+        "",
+        "| arch | shape | compute (s) | memory (s) | collective (s) | dominant "
+        "| MODEL_FLOPS | useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            a = arts.get((arch, shape))
+            if a is None:
+                continue
+            if a.get("status") != "OK":
+                lines.append(
+                    f"| {arch} | {shape} | - | - | - | {a.get('status')} | - | - | - |"
+                )
+                continue
+            t = terms_from_artifact(a)
+            lines.append(
+                f"| {arch} | {shape} | {t.compute_s:.4g} | {t.memory_s:.4g} "
+                f"| {t.collective_s:.4g} | **{t.dominant}** "
+                f"| {t.model_flops:.3g} | {t.useful_flops_ratio:.2f} "
+                f"| {t.roofline_fraction:.4f} |"
+            )
+    return "\n".join(lines)
+
+
+def worst_cells(mesh: str, k: int = 6) -> list[tuple]:
+    arts = load(mesh)
+    rows = []
+    for key, a in arts.items():
+        if a.get("status") != "OK" or key[0] == "leap_migration":
+            continue
+        t = terms_from_artifact(a)
+        rows.append((t.roofline_fraction, key, t.dominant))
+    rows.sort()
+    return rows[:k]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    meshes = [args.mesh] if args.mesh else ["pod", "multipod"]
+    for m in meshes:
+        print(dryrun_table(m))
+        print()
+        print(roofline_table(m))
+        print()
+        print(f"worst cells ({m}):")
+        for frac, key, dom in worst_cells(m):
+            print(f"  {frac:.5f}  {key}  dom={dom}")
+        print()
+
+
+if __name__ == "__main__":
+    main()

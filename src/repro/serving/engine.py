@@ -1,0 +1,284 @@
+"""Paged-KV serving engine on a leap pool: decode reads through the block
+table, appends mark in-flight blocks dirty, and KV blocks leap-migrate
+between regions *while decoding continues* — the serving-side integration
+of the paper's technique (DESIGN.md §4).
+
+One page = one token-range across ALL layers: payload
+``[L, 2, BLK, kv_heads, head_dim]`` (so migrating a sequence is one area).
+The decode hot loop uses ``repro.kernels.ops.paged_decode`` (Pallas on TPU,
+oracle elsewhere).  Supported stacks: uniform global-attention patterns
+("attn"/"moe" kinds); window/recurrent stacks serve via the contiguous
+cache path in ``launch/serve.py``.
+
+Regions: on a mesh, pool dim 0 shards over the data axis and each region
+serves its resident sequences; on one device (tests/benches) regions are
+logical rows — identical control flow.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import LeapConfig, MigrationDriver, PoolConfig, init_state
+from repro.core.state import REGION, SLOT
+from repro.kernels import ops
+from repro.models import lm
+from repro.models.common import rms_norm
+from repro.models.moe import moe_ffn
+from repro.models.common import mlp_forward
+from repro.models.attention import _project_qkv
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedConfig:
+    block_tokens: int = 16
+    max_blocks_per_seq: int = 64
+    n_regions: int = 2
+    slots_per_region: int = 256
+    leap: LeapConfig = dataclasses.field(default_factory=LeapConfig)
+
+
+@dataclasses.dataclass
+class Sequence:
+    sid: int
+    region: int
+    length: int
+    block_ids: list[int]  # logical leap block ids, in order
+    tokens: list[int]
+
+
+def _kv_write(state, block_ids, offsets, k_new, v_new):
+    """Append one token's K/V (all layers) into its page; leap-dirty fused.
+
+    block_ids/offsets: [B]; k_new/v_new: [B, L, KVH, hd].
+    """
+    loc = state.table[block_ids]
+    r, s = loc[:, REGION], loc[:, SLOT]
+    pool = state.pool
+    kv = jnp.stack([k_new, v_new], axis=2)  # [B, L, 2, KVH, hd]
+    pool = pool.at[r, s, :, :, offsets].set(kv.astype(pool.dtype))
+    dirty = state.dirty.at[block_ids].set(
+        state.dirty[block_ids] | state.in_flight[block_ids]
+    )
+    return dataclasses.replace(state, pool=pool, dirty=dirty)
+
+
+_kv_write = jax.jit(_kv_write, donate_argnames=("state",))
+
+
+class PagedEngine:
+    """Batched decode over a migration-managed paged KV cache."""
+
+    def __init__(self, cfg: ModelConfig, params, pcfg: PagedConfig):
+        for kind in cfg.layer_pattern + cfg.tail_pattern:
+            if kind not in ("attn", "moe"):
+                raise ValueError(
+                    f"PagedEngine supports uniform global-attention stacks; "
+                    f"{cfg.name} has kind {kind!r} (serve via contiguous path)"
+                )
+        if cfg.tail_pattern:
+            raise ValueError("PagedEngine expects a pure periodic stack")
+        self.cfg = cfg
+        self.params = params
+        self.pcfg = pcfg
+        payload = (
+            cfg.n_layers,
+            2,
+            pcfg.block_tokens,
+            cfg.n_kv_heads,
+            cfg.head_dim,
+        )
+        self.pool_cfg = PoolConfig(
+            pcfg.n_regions, pcfg.slots_per_region, payload, cfg.dtype()
+        )
+        # Pages occupy half the physical slots; the other half is the pooled
+        # migration headroom (the paper's "migration into pooled memory"
+        # requires pre-faulted destination capacity).
+        pages_per_region = pcfg.slots_per_region // 2
+        n_blocks = pcfg.n_regions * pages_per_region
+        placement = np.repeat(np.arange(pcfg.n_regions), pages_per_region)
+        state = init_state(self.pool_cfg, n_blocks, placement.astype(np.int32))
+        self.driver = MigrationDriver(state, self.pool_cfg, pcfg.leap)
+        self._free_blocks: list[list[int]] = [
+            list(range(r * pages_per_region, (r + 1) * pages_per_region))
+            for r in range(pcfg.n_regions)
+        ]
+        self.seqs: dict[int, Sequence] = {}
+        self._next_sid = 0
+
+    # -- admission ---------------------------------------------------------------
+
+    def _alloc_block(self, region: int) -> int:
+        for r in [region] + [x for x in range(self.pcfg.n_regions) if x != region]:
+            if self._free_blocks[r]:
+                return self._free_blocks[r].pop()
+        raise RuntimeError("KV pool exhausted")
+
+    def admit(self, prompt: np.ndarray, region: int = 0) -> int:
+        """Prefill a prompt, install its pages, and emit the first generated
+        token from the prefill logits (``seqs[sid].tokens[-1]``).  Subsequent
+        tokens come from ``decode()``, which processes the latest generated
+        token at position ``length``."""
+        cfg, blk = self.cfg, self.pcfg.block_tokens
+        toks = jnp.asarray(prompt)[None]
+        logits, cache = jax.jit(lambda p, t: lm.prefill(p, t, cfg, len(prompt)))(
+            self.params, toks
+        )
+        first_tok = int(jnp.argmax(logits, -1)[0])
+        # contiguous cache -> pages
+        k, v = _flatten_cache(cache, cfg)  # [L, S, KVH, hd]
+        s = len(prompt)
+        sid = self._next_sid
+        self._next_sid += 1
+        seq = Sequence(sid, region, s, [], list(map(int, prompt)) + [first_tok])
+        n_blocks = (s + blk - 1) // blk
+        for j in range(n_blocks):
+            b = self._alloc_block(region)
+            seq.block_ids.append(b)
+            lo, hi = j * blk, min((j + 1) * blk, s)
+            page = jnp.zeros(self.pool_cfg.block_shape, cfg.dtype())
+            page = page.at[:, 0, : hi - lo].set(k[:, lo:hi])
+            page = page.at[:, 1, : hi - lo].set(v[:, lo:hi])
+            self.driver.write(jnp.asarray([b]), page[None])
+        self.seqs[sid] = seq
+        return sid
+
+    def release(self, sid: int) -> None:
+        seq = self.seqs.pop(sid)
+        table = self.driver._table
+        for b in seq.block_ids:
+            self._free_blocks[int(table[b, REGION])].append(b)
+
+    # -- decode -------------------------------------------------------------------
+
+    def _tables(self, sids):
+        maxb = self.pcfg.max_blocks_per_seq
+        tab = np.zeros((len(sids), maxb), np.int32)
+        lens = np.zeros((len(sids),), np.int32)
+        for i, sid in enumerate(sids):
+            seq = self.seqs[sid]
+            tab[i, : len(seq.block_ids)] = seq.block_ids
+            lens[i] = seq.length
+        return jnp.asarray(tab), jnp.asarray(lens)
+
+    def decode(self, sids: list[int], greedy: bool = True) -> list[int]:
+        """One token for each sequence in ``sids``; appends in place."""
+        cfg, blk = self.cfg, self.pcfg.block_tokens
+        # allocate next block where needed, BEFORE the step
+        for sid in sids:
+            seq = self.seqs[sid]
+            if seq.length % blk == 0 and seq.length // blk >= len(seq.block_ids):
+                seq.block_ids.append(self._alloc_block(seq.region))
+        tables, lens = self._tables(sids)
+        toks = jnp.asarray([[self.seqs[s].tokens[-1]] for s in sids], jnp.int32)
+        logits, self.driver.state = _paged_step(
+            self.params, self.driver.state, tables, lens, toks, cfg, blk
+        )
+        out = np.asarray(jnp.argmax(logits, -1))
+        for i, sid in enumerate(sids):
+            seq = self.seqs[sid]
+            seq.tokens.append(int(out[i]))
+            seq.length += 1
+        return [int(t) for t in out]
+
+    # -- migration ------------------------------------------------------------------
+
+    def rebalance(self, sid: int, dst_region: int) -> int:
+        """Leap-migrate a live sequence's pages to another region."""
+        seq = self.seqs[sid]
+        n = self.driver.request(np.asarray(seq.block_ids, np.int32), dst_region)
+        seq.region = dst_region
+        return n
+
+    def tick(self) -> None:
+        self.driver.tick()
+
+    def drain(self) -> bool:
+        return self.driver.drain()
+
+
+def _flatten_cache(cache, cfg: ModelConfig):
+    """lm prefill cache -> (k, v) each [L, S, KVH, hd] (batch 1)."""
+    ks, vs = [], []
+    per = len(cfg.layer_pattern)
+    for pos in range(per):
+        c = cache["period"][pos]
+        # [repeats, 1, S, KVH, hd] -> interleave into layer order later
+        ks.append(np.asarray(c["k"][:, 0]))
+        vs.append(np.asarray(c["v"][:, 0]))
+    L = cfg.n_layers
+    s = ks[0].shape[1]
+    k = np.zeros((L, s) + ks[0].shape[2:], ks[0].dtype)
+    v = np.zeros_like(k)
+    for rep in range(cfg.repeats):
+        for pos in range(per):
+            k[rep * per + pos] = ks[pos][rep]
+            v[rep * per + pos] = vs[pos][rep]
+    for i, c in enumerate(cache["tail"]):
+        k[cfg.repeats * per + i] = np.asarray(c["k"][0])
+        v[cfg.repeats * per + i] = np.asarray(c["v"][0])
+    return jnp.asarray(k), jnp.asarray(v)
+
+
+def _paged_step(params, state, tables, lens, toks, cfg: ModelConfig, blk: int):
+    """One decode token through paged attention for every layer."""
+    b = toks.shape[0]
+    x = lm.embed_tokens(params, toks, cfg)
+    pos = lens  # per-sequence position (tokens cached so far)
+    flat_tables = state.table[tables.reshape(-1)]  # [(B*MAXB), 2]
+    s_per = state.pool.shape[1]
+    flat = (flat_tables[:, 0] * s_per + flat_tables[:, 1]).reshape(tables.shape)
+    pool_flat = state.pool.reshape((-1,) + state.pool.shape[2:])
+    append_block = tables[jnp.arange(b), lens // blk]
+    offset = lens % blk
+
+    period = cfg.layer_pattern
+    # layers unrolled (engine/demo path; the dry-run path scans)
+    new_k = []
+    new_v = []
+    li = 0
+    stacked = params["period"]
+    for rep in range(cfg.repeats):
+        for p_i, kind in enumerate(period):
+            lp = jax.tree.map(lambda t: t[rep], stacked[p_i])
+            h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+            q, k, v = _project_qkv(h, lp["attn"], cfg, pos[:, None])
+            new_k.append(k[:, 0])
+            new_v.append(v[:, 0])
+            # write this layer's new token kv, then attend over len+1 tokens
+            kv_pool_l = jax.lax.dynamic_index_in_dim(
+                pool_flat, li, axis=1, keepdims=False
+            )  # [S_flat, 2, BLK, KVH, hd]
+            kv_pool_l = kv_pool_l.at[
+                state.table[append_block, 0] * s_per + state.table[append_block, 1],
+                :,
+                offset,
+            ].set(jnp.stack([k[:, 0], v[:, 0]], axis=1).astype(kv_pool_l.dtype))
+            out, _, _ = ops.paged_decode_partial(
+                q[:, 0],
+                kv_pool_l,
+                flat,
+                lens + 1,
+                kv_heads=cfg.n_kv_heads,
+                softcap=cfg.attn_softcap,
+            )
+            y = out.reshape(b, 1, -1) @ lp["attn"]["wo"]
+            x = x + y
+            h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+            if kind == "moe":
+                y2, _ = moe_ffn(h2, lp["moe"], cfg)
+            else:
+                y2 = mlp_forward(h2, lp["mlp"], cfg.mlp_kind)
+            x = x + y2
+            li += 1
+    logits = lm.lm_logits(params, x, cfg)[:, 0]
+    # persist the appended kv of every layer through the leap-aware write
+    k_all = jnp.stack(new_k, axis=1)  # [B, L, KVH, hd]
+    v_all = jnp.stack(new_v, axis=1)
+    state = _kv_write(state, append_block, offset, k_all, v_all)
+    return logits, state

@@ -1,0 +1,100 @@
+"""The jitted training step: gradient accumulation over microbatches
+(``lax.scan``), remat'd model forward, AdamW update, donated state.
+
+This is the program the dry-run lowers for every ``train_4k`` cell.  The
+global batch is reshaped to ``[n_micro, micro_global, S]``; each microbatch's
+grads accumulate in fp32 (or the config's accum dtype) in the parameter
+sharding, so accumulation adds no communication — the gradient all-reduce
+happens inside jax.grad via the batch-sharded loss mean.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain_params
+from repro.models import lm
+from repro.train.optimizer import OptimizerConfig, apply_updates, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    n_micro: int = 1  # gradient-accumulation steps
+    accum_dtype: str = "float32"
+    optimizer: OptimizerConfig = dataclasses.field(default_factory=OptimizerConfig)
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+
+    def tree_flatten(self):  # pragma: no cover - registered below
+        return (self.params, self.opt), None
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt), None),
+    lambda _, kids: TrainState(*kids),
+)
+
+
+def init_train_state(key, cfg: ModelConfig, tcfg: TrainConfig) -> TrainState:
+    params = lm.init_params(key, cfg)
+    opt = init_opt_state(params, tcfg.optimizer)
+    return TrainState(params=params, opt=opt)
+
+
+def _microbatch(batch: dict, n_micro: int) -> dict:
+    def split(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def grad_accum(params, batch: dict, cfg: ModelConfig, tcfg: TrainConfig):
+    """Scan microbatches, accumulating grads; returns (grads, loss)."""
+    adt = jnp.dtype(tcfg.accum_dtype)
+    loss_fn = lambda p, b: lm.train_loss(p, b, cfg)[0]
+    if tcfg.n_micro == 1:
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        return grads, loss
+    micro = _microbatch(batch, tcfg.n_micro)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+
+    def body(carry, mb):
+        acc, loss_sum = carry
+        loss, g = jax.value_and_grad(loss_fn)(params, mb)
+        # pin each microbatch gradient to the parameter sharding: the update
+        # then lowers to a reduce-scatter into the sharded accumulator
+        # instead of materializing full (gathered) weight-shaped gradients
+        g = constrain_params(g)
+        acc = jax.tree.map(lambda a, gg: a + gg.astype(adt), acc, g)
+        acc = constrain_params(acc)
+        return (acc, loss_sum + loss), None
+
+    (acc, loss_sum), _ = lax.scan(body, (zeros, jnp.zeros((), jnp.float32)), micro)
+    grads = jax.tree.map(lambda a: a / tcfg.n_micro, acc)
+    return grads, loss_sum / tcfg.n_micro
+
+
+def train_step(state: TrainState, batch: dict, cfg: ModelConfig, tcfg: TrainConfig):
+    """(state, batch) -> (state', metrics).  Donate ``state`` when jitting."""
+    grads, loss = grad_accum(state.params, batch, cfg, tcfg)
+    params, opt, om = apply_updates(state.params, grads, state.opt, tcfg.optimizer)
+    metrics = {"loss": loss, **om}
+    return TrainState(params=params, opt=opt), metrics
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    return partial(train_step, cfg=cfg, tcfg=tcfg)

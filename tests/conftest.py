@@ -1,0 +1,13 @@
+"""Test-session guards."""
+
+import jax
+
+
+def pytest_sessionstart(session):
+    # Smoke tests and benches must see exactly ONE device: only
+    # launch/dryrun.py (and explicit subprocess tests) may set
+    # xla_force_host_platform_device_count (see pyproject note).
+    assert len(jax.devices()) == 1, (
+        "test session must run on a single device; dry-run flags leaked: "
+        f"{jax.devices()}"
+    )

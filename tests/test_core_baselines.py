@@ -1,0 +1,78 @@
+"""Tests for the move_pages()-analogue sync resharder and the auto-balancer."""
+
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    AutoBalanceConfig,
+    AutoBalancer,
+    PoolConfig,
+    SyncResharder,
+    init_state,
+    leap_read,
+    leap_write,
+)
+from repro.core.migrator import begin_area
+from repro.core.state import REGION
+
+
+def make(n_blocks=8, n_regions=2, slots=16):
+    cfg = PoolConfig(n_regions, slots, (4,))
+    state = init_state(cfg, n_blocks, np.zeros(n_blocks, np.int32))
+    data = np.arange(n_blocks * 4, dtype=np.float32).reshape(n_blocks, 4)
+    state = leap_write(state, jnp.arange(n_blocks), jnp.asarray(data))
+    table = np.asarray(state.table).copy()
+    free = [deque(range(n_blocks if r == 0 else 0, slots)) for r in range(n_regions)]
+    return cfg, state, data, table, free
+
+
+def test_sync_reshard_moves_and_preserves():
+    cfg, state, data, table, free = make()
+    rs = SyncResharder(cfg)
+    state, res = rs.migrate(state, table, free, np.arange(8), dst_region=1)
+    assert len(res.migrated) == 8 and len(res.failed) == 0
+    assert (table[:, REGION] == 1).all()
+    np.testing.assert_array_equal(np.asarray(leap_read(state, jnp.arange(8))), data)
+    # fresh allocation pays a zero pass on top of the copy
+    assert res.bytes_touched == 2 * res.bytes_copied
+
+
+def test_sync_reshard_skips_busy_blocks():
+    cfg, state, data, table, free = make()
+    state = begin_area(state, jnp.asarray([2, 5]))  # blocks 2,5 are "busy"
+    rs = SyncResharder(cfg)
+    state, res = rs.migrate(state, table, free, np.arange(8), dst_region=1)
+    assert sorted(res.failed.tolist()) == [2, 5]  # no retry: unreliable
+    assert table[2, REGION] == 0 and table[5, REGION] == 0
+    assert (table[[0, 1, 3, 4, 6, 7], REGION] == 1).all()
+
+
+def test_sync_reshard_pooled_mode_no_zero_pass():
+    cfg, state, data, table, free = make()
+    rs = SyncResharder(cfg, fresh_alloc=False)
+    state, res = rs.migrate(state, table, free, np.arange(4), dst_region=1)
+    assert res.bytes_touched == res.bytes_copied
+
+
+def test_autobalancer_migrates_hot_blocks_when_idle():
+    cfg, state, data, table, free = make()
+    ab = AutoBalancer(cfg, 8, AutoBalanceConfig(hot_threshold=3))
+    for _ in range(4):
+        ab.observe_reads(np.asarray([0, 1]), reader_region=1, table_host=table)
+    state, moved = ab.scan(state, table, free)
+    assert moved == 2
+    assert table[0, REGION] == 1 and table[1, REGION] == 1
+    np.testing.assert_array_equal(np.asarray(leap_read(state, jnp.arange(8))), data)
+
+
+def test_autobalancer_defers_under_write_pressure():
+    cfg, state, data, table, free = make()
+    ab = AutoBalancer(cfg, 8, AutoBalanceConfig(hot_threshold=1, pressure_threshold=0.1))
+    ab.observe_reads(np.arange(8), reader_region=1, table_host=table)
+    ab.observe_writes(100)  # heavy write burst
+    state, moved = ab.scan(state, table, free)
+    assert moved == 0  # "waits for times of little load"
+    state, moved = ab.scan(state, table, free)  # pressure cleared
+    assert moved > 0
