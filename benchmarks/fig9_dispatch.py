@@ -1,0 +1,77 @@
+"""Fig. 9 (beyond paper) — control-path cost of migration dispatch.
+
+Head-to-head of the legacy per-chunk dispatch path (one jitted program per
+16-block chunk and per area, a fresh XLA compile for every distinct batch
+length the adaptive splitter produces) against the batched path (shape-
+bucketed fused multi-area programs, <=3 dispatches per tick).  Two workloads:
+
+  * ``quiet``  — the fig4 drain (no concurrent writes): pure dispatch count.
+  * ``storm``  — the fig5 "high" case (concurrent writes -> dirty retries ->
+                 adaptive splitting): unique batch lengths, i.e. compile storm.
+
+Reported per configuration: drain wall-clock (cold: includes compiles, and
+warm: jit caches hot), dispatches/tick, and migration-program jit cache
+misses during the run.  ``derived`` also carries the batched-over-legacy
+warm-drain speedup on the batched rows.
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import WriteBurst, emit, make_pool
+from repro.core import LeapConfig
+
+
+def _drain(n_blocks, block_kb, fused, per_tick, seed=0):
+    lc = LeapConfig(
+        initial_area_blocks=64,
+        chunk_blocks=16,
+        budget_blocks_per_tick=64,
+        max_attempts_before_force=6,
+        fused_dispatch=fused,
+    )
+    _, drv, _ = make_pool(n_blocks, block_kb, leap=lc, seed=seed)
+    burst = WriteBurst(drv, n_blocks, per_tick)
+    drv.request(np.arange(n_blocks), 1)
+    t0 = time.perf_counter()
+    ticks = 0
+    while not drv.done and ticks < 20_000:
+        drv.tick()
+        burst.fire()
+        ticks += 1
+    ok = drv.drain()
+    jax.block_until_ready(drv.state.pool)
+    dt = time.perf_counter() - t0
+    assert ok and drv.verify_mirror()
+    return dt, drv.stats
+
+
+def run(n_blocks=256, block_kb=64):
+    results = {}
+    for wl_label, per_tick in (("quiet", 0), ("storm", 8)):
+        for fused in (False, True):
+            mode = "batched" if fused else "legacy"
+            # cold: first drain of this (mode, workload) pays its compiles;
+            # warm: same shapes again, so wall-clock isolates dispatch count.
+            t_cold, stats_cold = _drain(n_blocks, block_kb, fused, per_tick, seed=0)
+            t_warm, stats_warm = _drain(n_blocks, block_kb, fused, per_tick, seed=1)
+            results[(wl_label, mode)] = t_warm
+            speedup = ""
+            if fused:
+                speedup = f";speedup_warm=x{results[(wl_label, 'legacy')] / t_warm:.2f}"
+            emit(
+                f"fig9/{wl_label}/{mode}",
+                t_warm * 1e6,
+                f"cold_us={t_cold * 1e6:.0f}"
+                f";disp_per_tick={stats_warm.dispatches_per_tick:.2f}"
+                f";jit_misses_cold={stats_cold.jit_cache_misses}"
+                f";jit_misses_warm={stats_warm.jit_cache_misses}"
+                f";retries={stats_warm.dirty_rejections}" + speedup,
+            )
+    return results
+
+
+if __name__ == "__main__":
+    run()

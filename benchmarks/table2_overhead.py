@@ -3,6 +3,9 @@ under concurrent writes (100K-writes/s analogue = the "high" case).
 
 memory overhead: extra bytes copied due to dirty retries (stats-based).
 time overhead: wall time over copying the same useful bytes via raw copy.
+control-path cost: device dispatches per tick and migration-program jit
+compiles incurred during the run (fig9_dispatch.py measures these head to
+head against the legacy per-chunk dispatch path).
 """
 
 import time
@@ -48,7 +51,9 @@ def run(n_blocks=256, block_kb=64, per_tick=8):
             dt * 1e6,
             f"mem_overhead={100 * extra / (useful_mb * 2**20):.1f}%"
             f";time_overhead={100 * (dt / t_opt - 1):.0f}%"
-            f";retries={drv.stats.dirty_rejections}",
+            f";retries={drv.stats.dirty_rejections}"
+            f";disp_per_tick={drv.stats.dispatches_per_tick:.2f}"
+            f";jit_misses={drv.stats.jit_cache_misses}",
         )
     return True
 

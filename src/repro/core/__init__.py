@@ -13,8 +13,14 @@ from repro.core.state import (
     placement_histogram,
     state_sharding,
 )
-from repro.core.adaptive import Area, decompose_request, split_area
-from repro.core.driver import LeapConfig, MigrationDriver, MigrationStats
+from repro.core.adaptive import (
+    Area,
+    bucket_size,
+    decompose_request,
+    pad_to_bucket,
+    split_area,
+)
+from repro.core.driver import FreeList, LeapConfig, MigrationDriver, MigrationStats
 from repro.core.baselines import (
     AutoBalanceConfig,
     AutoBalancer,
@@ -35,8 +41,11 @@ __all__ = [
     "placement_histogram",
     "state_sharding",
     "Area",
+    "bucket_size",
     "decompose_request",
+    "pad_to_bucket",
     "split_area",
+    "FreeList",
     "LeapConfig",
     "MigrationDriver",
     "MigrationStats",

@@ -1,4 +1,4 @@
-"""Adaptive area sizing (paper §4.2).
+"""Adaptive area sizing (paper §4.2) and dispatch-shape bucketing.
 
 The user picks only an *initial* area size.  When an area's commit is
 rejected because blocks became dirty, the driver requeues the dirty blocks as
@@ -6,6 +6,13 @@ rejected because blocks became dirty, the driver requeues the dirty blocks as
 window per retry.  Skewed write pressure therefore shrinks granularity only
 where the pressure is (clean sub-ranges of a rejected area are *not*
 requeued — they already migrated at commit).
+
+Adaptive splitting produces a storm of distinct batch lengths, and every
+distinct length is a fresh XLA trace/compile.  ``bucket_size`` /
+``pad_to_bucket`` round every device batch up to a geometric bucket so the
+jit cache stabilizes at O(log n) entries (DESIGN.md §3).  Padding replicates
+lane 0, which makes every batched program idempotent under the duplicate
+lanes — no validity masks or out-of-bounds sentinels needed.
 """
 
 from __future__ import annotations
@@ -46,6 +53,40 @@ def decompose_request(
         ids = np.asarray(block_ids[start : start + initial_area_blocks], dtype=np.int32)
         out.append(Area(block_ids=ids, src_region=src_region, dst_region=dst_region))
     return out
+
+
+def bucket_size(n: int, growth: int = 4) -> int:
+    """Smallest power of ``growth`` >= n (the padded dispatch length).
+
+    With growth 4 and a per-tick budget of 64 blocks, copy batches compile at
+    most the shapes {1, 4, 16, 64} — four variants instead of one per unique
+    length the adaptive splitter happens to produce.
+    """
+    if n < 1:
+        raise ValueError(f"bucket_size needs n >= 1, got {n}")
+    if growth < 2:
+        raise ValueError(f"bucket_size needs growth >= 2, got {growth}")
+    b = 1
+    while b < n:
+        b *= growth
+    return b
+
+
+def pad_to_bucket(bucket: int, *arrays: np.ndarray) -> tuple[np.ndarray, ...]:
+    """Pad equal-length int32 arrays to ``bucket`` lanes by replicating lane 0.
+
+    Replication (rather than a sentinel) keeps every batched device program
+    correct without a validity mask: duplicate lanes re-apply lane 0's update
+    with identical values, which is idempotent for all migration programs
+    (flag sets, table flips, and pool copies all write the same bytes).
+    """
+    out = []
+    for a in arrays:
+        a = np.asarray(a, dtype=np.int32)
+        if len(a) == 0 or len(a) > bucket:
+            raise ValueError(f"cannot pad length {len(a)} to bucket {bucket}")
+        out.append(np.concatenate([a, np.full(bucket - len(a), a[0], np.int32)]))
+    return tuple(out)
 
 
 def split_area(

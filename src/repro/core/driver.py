@@ -12,6 +12,15 @@ driver only blocks when it *needs* a commit verdict and the device hasn't
 produced it yet.  Interleaving application write/compute steps between
 ``tick()`` calls reproduces the paper's concurrent-writer races at step
 granularity (see DESIGN.md §2).
+
+Dispatch batching (DESIGN.md §3): with ``fused_dispatch`` (the default) a
+tick issues at most three device programs — one ``begin_areas`` for every
+epoch opened this tick, one ``fused_copy`` for the whole tick's chunk plan
+across all areas, and one ``commit_areas`` returning a packed verdict vector
+(plus a rare ``force_areas`` when write-through escalation fires).  Batch
+lengths are padded to geometric buckets so the jit cache stays at O(log n)
+entries under adaptive splitting.  ``fused_dispatch=False`` selects the
+legacy per-chunk/per-area dispatch path (the benchmark baseline).
 """
 
 from __future__ import annotations
@@ -23,7 +32,13 @@ import jax
 import numpy as np
 
 from repro.core import migrator
-from repro.core.adaptive import Area, decompose_request, split_area
+from repro.core.adaptive import (
+    Area,
+    bucket_size,
+    decompose_request,
+    pad_to_bucket,
+    split_area,
+)
 from repro.core.state import REGION, SLOT, LeapState, PoolConfig, leap_read, leap_write, leap_write_rows
 
 
@@ -34,11 +49,14 @@ class LeapConfig:
     initial_area_blocks: int = 64  # "initial area size" (16MB sweet spot)
     reduction_factor: int = 2  # split factor on dirty retry
     min_area_blocks: int = 1
-    chunk_blocks: int = 16  # copy-dispatch granularity within an epoch
+    chunk_blocks: int = 16  # copy-dispatch granularity (legacy dispatch path)
     budget_blocks_per_tick: int = 64  # async migration budget per tick/step
     max_attempts_before_force: int = 8  # write-through escalation (beyond paper)
     backend: str = "xla"  # "xla" | "ppermute"
     axis_name: str | None = None  # region mesh axis (ppermute backend)
+    fused_dispatch: bool = True  # batch each tick into <=3 device programs
+    bucket_growth: int = 4  # geometric padding factor for batch shapes
+    copy_impl: str | None = None  # leap_copy impl: None=auto|"pallas"|"ref"
 
 
 @dataclasses.dataclass
@@ -51,10 +69,78 @@ class MigrationStats:
     splits: int = 0
     dispatches: int = 0
     ticks: int = 0
+    jit_cache_misses: int = 0  # migration-program compiles since driver init
 
     def extra_bytes(self, block_bytes: int) -> int:
         useful = (self.blocks_migrated + self.blocks_forced) * block_bytes
         return max(0, self.bytes_copied - useful)
+
+    @property
+    def dispatches_per_tick(self) -> float:
+        """Device programs issued per migration tick (control-path cost)."""
+        return self.dispatches / self.ticks if self.ticks else 0.0
+
+
+class FreeList:
+    """LIFO free-slot list backed by a numpy array (vectorized alloc/free).
+
+    ``take``/``put`` move n slots in one slice; ``popleft``/``append``/
+    iteration keep the deque-ish API the baselines (SyncResharder,
+    AutoBalancer) and tests use.  Note ``popleft`` pops from the top of the
+    stack — callers only rely on getting *some* free slot, not on FIFO order.
+    """
+
+    def __init__(self, slots: np.ndarray):
+        slots = np.asarray(slots, dtype=np.int32)
+        self._buf = slots.copy()
+        self._n = len(slots)
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __iter__(self):
+        return iter(self._buf[: self._n].tolist())
+
+    def take(self, n: int) -> np.ndarray | None:
+        """Pop ``n`` slots at once, or None if fewer are available."""
+        if self._n < n:
+            return None
+        out = self._buf[self._n - n : self._n].copy()
+        self._n -= n
+        return out
+
+    def put(self, slots: np.ndarray) -> None:
+        """Push a batch of slots."""
+        slots = np.asarray(slots, dtype=np.int32)
+        need = self._n + len(slots)
+        if need > len(self._buf):
+            grown = np.empty(max(need, 2 * len(self._buf) + 1), np.int32)
+            grown[: self._n] = self._buf[: self._n]
+            self._buf = grown
+        self._buf[self._n : need] = slots
+        self._n = need
+
+    # deque-compat shims (baselines allocate one slot at a time)
+    def popleft(self) -> int:
+        if self._n == 0:
+            raise IndexError("pop from empty FreeList")
+        self._n -= 1
+        return int(self._buf[self._n])
+
+    def append(self, slot: int) -> None:
+        self.put(np.asarray([slot], np.int32))
+
+    def extend(self, slots) -> None:
+        self.put(np.fromiter(slots, np.int32))
+
+
+@dataclasses.dataclass
+class _CommitBatch:
+    """One in-flight commit dispatch: areas packed into a single verdict."""
+
+    areas: list[Area]
+    offsets: np.ndarray  # [len(areas) + 1] prefix offsets into verdict
+    verdict: jax.Array  # padded packed verdict (device)
 
 
 class MigrationDriver:
@@ -75,18 +161,18 @@ class MigrationDriver:
         # Host mirrors (the driver performs every allocation/remap, so these
         # stay exact without device round-trips).
         self._table = np.asarray(state.table).copy()
-        used = [set() for _ in range(pool_cfg.n_regions)]
-        for b in range(state.n_blocks):
-            used[self._table[b, REGION]].add(int(self._table[b, SLOT]))
-        self._free: list[deque[int]] = [
-            deque(s for s in range(pool_cfg.slots_per_region) if s not in used[r])
+        free_mask = np.ones((pool_cfg.n_regions, pool_cfg.slots_per_region), bool)
+        free_mask[self._table[:, REGION], self._table[:, SLOT]] = False
+        # store descending so the LIFO top hands out the lowest slot first
+        self._free: list[FreeList] = [
+            FreeList(np.nonzero(free_mask[r])[0][::-1])
             for r in range(pool_cfg.n_regions)
         ]
         self._queue: deque[Area] = deque()
         self._active: list[Area] = []
-        # (area, verdict_device_array) pairs awaiting host processing
-        self._pending: list[tuple[Area, jax.Array]] = []
-        self._migrating: set[int] = set()  # block ids with an open request
+        self._pending: list[_CommitBatch] = []
+        self._migrating = np.zeros(state.n_blocks, dtype=bool)  # open requests
+        self._cache_baseline = migrator.program_cache_size()
 
     # -- application-facing I/O (everything mutating goes through here) ----
 
@@ -110,16 +196,17 @@ class MigrationDriver:
         """Enqueue migration of ``block_ids`` to ``dst_region``.
 
         Blocks already at the destination or already under migration are
-        skipped.  Returns the number of blocks actually enqueued.
+        skipped (duplicates within one call are deduplicated).  Returns the
+        number of blocks actually enqueued.
         """
-        block_ids = np.asarray(block_ids, dtype=np.int32)
-        mask = (self._table[block_ids, REGION] != dst_region) & np.array(
-            [b not in self._migrating for b in block_ids.tolist()]
-        )
+        block_ids = np.unique(np.asarray(block_ids, dtype=np.int32))
+        mask = (self._table[block_ids, REGION] != dst_region) & ~self._migrating[
+            block_ids
+        ]
         block_ids = block_ids[mask]
         if len(block_ids) == 0:
             return 0
-        self._migrating.update(int(b) for b in block_ids.tolist())
+        self._migrating[block_ids] = True
         self.stats.blocks_requested += len(block_ids)
         # Group by current source region (areas are single-source so the
         # ppermute backend has static endpoints).
@@ -138,8 +225,8 @@ class MigrationDriver:
     @property
     def pending_blocks(self) -> int:
         n = sum(len(a) for a in self._queue) + sum(len(a) for a in self._active)
-        n += sum(len(a) for a, _ in self._pending)
-        return n
+        n += sum(batch.offsets[-1] for batch in self._pending)
+        return int(n)
 
     # -- the migration loop --------------------------------------------------
 
@@ -147,9 +234,11 @@ class MigrationDriver:
         """One asynchronous migration slice: spend the per-tick block budget.
 
         A tick (i) harvests any commit verdicts that are already on the host,
-        (ii) advances copies of open epochs, (iii) opens new epochs, and
-        (iv) dispatches commits for fully-copied areas.  Dispatches are async;
-        interleave application steps between ticks for concurrency.
+        (ii) dispatches commits for areas whose copy completed in an earlier
+        tick, (iii) advances copies of open epochs and opens new epochs.
+        With fused dispatch the whole tick is <=3 device programs; dispatches
+        are async either way — interleave application steps between ticks for
+        concurrency.
         """
         self.stats.ticks += 1
         self._harvest(block=False)
@@ -157,25 +246,47 @@ class MigrationDriver:
         # commit by one tick keeps the copy->remap window open across at least
         # one application step, faithfully reproducing the paper's race (its
         # footnote 1: a write can land after the copy but before the remap).
-        for area in [a for a in self._active if a.copied == len(a)]:
-            self._dispatch_commit(area)
-        budget = self.cfg.budget_blocks_per_tick
+        fused = self.cfg.fused_dispatch
+        ready = [a for a in self._active if a.copied == len(a)]
+        if fused:
+            self._dispatch_commit_batch(ready)
+        else:
+            for area in ready:
+                self._dispatch_commit(area)
 
+        budget = self.cfg.budget_blocks_per_tick
+        opened: list[Area] = []  # epochs opened this tick (fused: batch begin)
+        forced: list[Area] = []  # escalations this tick (fused: batch force)
+        plan: list[tuple[Area, np.ndarray, np.ndarray]] = []  # copy chunks
         while budget > 0:
             area = self._next_copyable()
             if area is not None:
-                n = min(self.cfg.chunk_blocks, len(area) - area.copied, budget)
+                per_area = len(area) - area.copied if fused else self.cfg.chunk_blocks
+                n = min(per_area, len(area) - area.copied, budget)
                 ids = area.block_ids[area.copied : area.copied + n]
                 slots = area.dst_slots[area.copied : area.copied + n]
-                self._dispatch_copy(area, ids, slots)
+                if fused:
+                    plan.append((area, ids, slots))
+                else:
+                    self._dispatch_copy(area, ids, slots)
                 area.copied += n
                 budget -= n
                 continue
             if self._queue:
-                if not self._open_epoch(self._queue.popleft()):
+                if not self._open_epoch(self._queue.popleft(), opened, forced):
                     break  # destination out of slots; wait for frees
                 continue
             break
+        if fused:
+            # Device order matters: begin before copy (epoch flags gate dirty
+            # tracking), force before copy (a forced block's freed source slot
+            # may already be reallocated as a copy destination this tick).
+            self._dispatch_begin_batch(opened)
+            self._dispatch_force_batch(forced)
+            self._dispatch_copy_batch(plan)
+        self.stats.jit_cache_misses = (
+            migrator.program_cache_size() - self._cache_baseline
+        )
 
     def drain(self, max_ticks: int = 100_000) -> bool:
         """Run ticks until all requested blocks migrated (or tick budget ends).
@@ -200,12 +311,9 @@ class MigrationDriver:
         return None
 
     def _alloc(self, region: int, n: int) -> np.ndarray | None:
-        free = self._free[region]
-        if len(free) < n:
-            return None
-        return np.asarray([free.popleft() for _ in range(n)], dtype=np.int32)
+        return self._free[region].take(n)
 
-    def _open_epoch(self, area: Area) -> bool:
+    def _open_epoch(self, area: Area, opened: list[Area], forced: list[Area]) -> bool:
         slots = self._alloc(area.dst_region, len(area))
         if slots is None:
             # Not enough pooled slots for the whole area right now.  If the
@@ -224,21 +332,140 @@ class MigrationDriver:
         area.copied = 0
         if area.attempts >= self.cfg.max_attempts_before_force:
             # Write-through escalation: fused copy+flip, cannot be dirtied.
-            self.state = migrator.force_migrate(
-                self.state,
-                jax.numpy.asarray(area.block_ids),
-                jax.numpy.asarray(slots),
-                int(area.dst_region),
-            )
-            self.stats.dispatches += 1
             self.stats.bytes_copied += len(area) * self.pool_cfg.block_bytes
             self.stats.blocks_forced += len(area)
-            self._finalize_success(area, np.zeros(len(area), dtype=bool))
+            if self.cfg.fused_dispatch:
+                forced.append(area)  # device dispatch batched at end of tick
+            else:
+                self.state = migrator.force_migrate(
+                    self.state,
+                    jax.numpy.asarray(area.block_ids),
+                    jax.numpy.asarray(area.dst_slots),
+                    int(area.dst_region),
+                )
+                self.stats.dispatches += 1
+            self._finalize_success(area)
             return True
-        self.state = migrator.begin_area(self.state, jax.numpy.asarray(area.block_ids))
-        self.stats.dispatches += 1
+        if self.cfg.fused_dispatch:
+            opened.append(area)  # begin batched at end of tick, before copies
+        else:
+            self.state = migrator.begin_area(
+                self.state, jax.numpy.asarray(area.block_ids)
+            )
+            self.stats.dispatches += 1
         self._active.append(area)
         return True
+
+    # -- batched dispatch (fused path) ----------------------------------------
+
+    def _pad(self, *arrays: np.ndarray) -> tuple[np.ndarray, ...]:
+        return pad_to_bucket(
+            bucket_size(len(arrays[0]), self.cfg.bucket_growth), *arrays
+        )
+
+    def _dispatch_begin_batch(self, opened: list[Area]) -> None:
+        if not opened:
+            return
+        (ids,) = self._pad(np.concatenate([a.block_ids for a in opened]))
+        self.state = migrator.begin_areas(self.state, jax.numpy.asarray(ids))
+        self.stats.dispatches += 1
+
+    def _dispatch_force_batch(self, forced: list[Area]) -> None:
+        if not forced:
+            return
+        ids = np.concatenate([a.block_ids for a in forced])
+        regions = np.concatenate(
+            [np.full(len(a), a.dst_region, np.int32) for a in forced]
+        )
+        slots = np.concatenate([a.dst_slots for a in forced])
+        ids, regions, slots = self._pad(ids, regions, slots)
+        self.state = migrator.force_areas(
+            self.state,
+            jax.numpy.asarray(ids),
+            jax.numpy.asarray(regions),
+            jax.numpy.asarray(slots),
+        )
+        self.stats.dispatches += 1
+
+    def _dispatch_copy_batch(
+        self, plan: list[tuple[Area, np.ndarray, np.ndarray]]
+    ) -> None:
+        if not plan:
+            return
+        n_blocks = sum(len(ids) for _, ids, _ in plan)
+        self.stats.bytes_copied += n_blocks * self.pool_cfg.block_bytes
+        if self.cfg.backend == "ppermute":
+            self._dispatch_copy_batch_ppermute(plan)
+            return
+        s_per = self.pool_cfg.slots_per_region
+        ids = np.concatenate([ids for _, ids, _ in plan])
+        dst_regions = np.concatenate(
+            [np.full(len(c), a.dst_region, np.int32) for a, c, _ in plan]
+        )
+        dst_slots = np.concatenate([slots for _, _, slots in plan])
+        # Flat slot ids from the exact host mirror: table entries of in-flight
+        # blocks cannot change until their commit, which this driver issues.
+        src_flat = self._table[ids, REGION] * s_per + self._table[ids, SLOT]
+        dst_flat = dst_regions * s_per + dst_slots
+        src_flat, dst_flat = self._pad(src_flat, dst_flat)
+        self.state = migrator.fused_copy(
+            self.state,
+            jax.numpy.asarray(src_flat),
+            jax.numpy.asarray(dst_flat),
+            impl=self.cfg.copy_impl,
+        )
+        self.stats.dispatches += 1
+
+    def _dispatch_copy_batch_ppermute(
+        self, plan: list[tuple[Area, np.ndarray, np.ndarray]]
+    ) -> None:
+        if self.mesh is None or self.cfg.axis_name is None:
+            raise ValueError("ppermute backend requires mesh and axis_name")
+        # One point-to-point program per (src, dst) region pair this tick;
+        # areas are single-source so chunks group cleanly.
+        pairs: dict[tuple[int, int], list[tuple[np.ndarray, np.ndarray]]] = {}
+        for area, ids, slots in plan:
+            pairs.setdefault((area.src_region, area.dst_region), []).append(
+                (self._table[ids, SLOT], slots)
+            )
+        for (src, dst), chunks in pairs.items():
+            src_slots = np.concatenate([c[0] for c in chunks])
+            dst_slots = np.concatenate([c[1] for c in chunks])
+            src_slots, dst_slots = self._pad(src_slots, dst_slots)
+            self.state = migrator.fused_copy_ppermute(
+                self.state,
+                jax.numpy.asarray(src_slots),
+                jax.numpy.asarray(dst_slots),
+                int(src),
+                int(dst),
+                self.cfg.axis_name,
+                self.mesh,
+                impl=self.cfg.copy_impl,
+            )
+            self.stats.dispatches += 1
+
+    def _dispatch_commit_batch(self, ready: list[Area]) -> None:
+        if not ready:
+            return
+        ids = np.concatenate([a.block_ids for a in ready])
+        regions = np.concatenate(
+            [np.full(len(a), a.dst_region, np.int32) for a in ready]
+        )
+        slots = np.concatenate([a.dst_slots for a in ready])
+        offsets = np.cumsum([0] + [len(a) for a in ready])
+        p_ids, p_regions, p_slots = self._pad(ids, regions, slots)
+        self.state, verdict = migrator.commit_areas(
+            self.state,
+            jax.numpy.asarray(p_ids),
+            jax.numpy.asarray(p_regions),
+            jax.numpy.asarray(p_slots),
+        )
+        self.stats.dispatches += 1
+        for a in ready:
+            self._active.remove(a)
+        self._pending.append(_CommitBatch(ready, offsets, verdict))
+
+    # -- legacy per-area dispatch (fused_dispatch=False baseline) -------------
 
     def _dispatch_copy(self, area: Area, ids: np.ndarray, slots: np.ndarray) -> None:
         if self.cfg.backend == "ppermute":
@@ -272,53 +499,57 @@ class MigrationDriver:
         )
         self.stats.dispatches += 1
         self._active.remove(area)
-        self._pending.append((area, verdict))
+        self._pending.append(
+            _CommitBatch([area], np.asarray([0, len(area)]), verdict)
+        )
+
+    # -- verdict processing ---------------------------------------------------
 
     def _harvest(self, block: bool) -> None:
         still = []
-        for area, verdict in self._pending:
+        for batch in self._pending:
             ready = block
             if not ready:
                 try:
-                    ready = verdict.is_ready()
+                    ready = batch.verdict.is_ready()
                 except AttributeError:  # pragma: no cover - older jax
                     ready = True
             if not ready:
-                still.append((area, verdict))
+                still.append(batch)
                 continue
-            self._process_verdict(area, np.asarray(verdict))
+            packed = np.asarray(batch.verdict)
+            for area, start, end in zip(batch.areas, batch.offsets, batch.offsets[1:]):
+                self._process_verdict(area, packed[start:end])
         self._pending = still
 
     def _process_verdict(self, area: Area, dirty: np.ndarray) -> None:
         clean = ~dirty
         # Clean blocks: the remap took effect on device; mirror it.
-        for i in np.nonzero(clean)[0]:
-            b = int(area.block_ids[i])
-            old_r, old_s = int(self._table[b, REGION]), int(self._table[b, SLOT])
-            self._free[old_r].append(old_s)
-            self._table[b, REGION] = area.dst_region
-            self._table[b, SLOT] = int(area.dst_slots[i])
-            self._migrating.discard(b)
+        self._remap_host(area.block_ids[clean], area.dst_region, area.dst_slots[clean])
         self.stats.blocks_migrated += int(clean.sum())
         # Dirty blocks: stale copies; free reserved slots and requeue smaller.
         n_dirty = int(dirty.sum())
         if n_dirty:
             self.stats.dirty_rejections += n_dirty
-            for i in np.nonzero(dirty)[0]:
-                self._free[area.dst_region].append(int(area.dst_slots[i]))
+            self._free[area.dst_region].put(area.dst_slots[dirty])
             subs = split_area(area, dirty, self.cfg.reduction_factor, self.cfg.min_area_blocks)
             self.stats.splits += max(0, len(subs) - 1)
             self._queue.extend(subs)
 
-    def _finalize_success(self, area: Area, dirty: np.ndarray) -> None:
+    def _finalize_success(self, area: Area) -> None:
         # Force path: all blocks flipped on device; mirror and free sources.
-        for i in range(len(area)):
-            b = int(area.block_ids[i])
-            old_r, old_s = int(self._table[b, REGION]), int(self._table[b, SLOT])
-            self._free[old_r].append(old_s)
-            self._table[b, REGION] = area.dst_region
-            self._table[b, SLOT] = int(area.dst_slots[i])
-            self._migrating.discard(b)
+        self._remap_host(area.block_ids, area.dst_region, area.dst_slots)
+
+    def _remap_host(self, ids: np.ndarray, dst_region: int, dst_slots: np.ndarray) -> None:
+        """Mirror a device remap: free old sources, point ids at (dst, slots)."""
+        if len(ids) == 0:
+            return
+        old = self._table[ids].copy()
+        for r in np.unique(old[:, REGION]):
+            self._free[r].put(old[old[:, REGION] == r, SLOT])
+        self._table[ids, REGION] = dst_region
+        self._table[ids, SLOT] = dst_slots
+        self._migrating[ids] = False
 
     # -- introspection ---------------------------------------------------------
 

@@ -26,6 +26,19 @@ Two copy backends:
                     area bytes (the `memcpy` analogue).  The local HBM
                     gather/scatter packing inside the shard is the
                     ``leap_copy`` Pallas kernel on TPU.
+
+Two dispatch generations (DESIGN.md §3):
+
+  * the per-area/per-chunk programs (``begin_area``/``copy_chunk``/
+    ``commit_area``/``force_migrate``) — one dispatch per chunk and per area,
+    with the destination region baked in statically; retained as the
+    benchmark baseline and for callers that drive single areas directly;
+  * the batched programs (``begin_areas``/``fused_copy``/``commit_areas``/
+    ``force_areas``) — one dispatch covers every area the driver scheduled
+    this tick.  Batch lengths are padded to geometric buckets by replicating
+    lane 0 (idempotent duplicate updates), so the jit cache holds O(log n)
+    entries however the adaptive splitter fragments the work, and the
+    destination region is a traced operand rather than a static one.
 """
 
 from __future__ import annotations
@@ -37,7 +50,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.state import REGION, SLOT, LeapState
+from repro.core.state import REGION, SLOT, LeapState, flat_pool_view
+from repro.kernels import ops
 
 try:  # JAX >= 0.7 public API
     from jax import shard_map as _shard_map
@@ -168,3 +182,164 @@ def force_migrate(
     return dataclasses.replace(
         state, pool=pool, table=table, in_flight=in_flight, dirty=dirty
     )
+
+
+# --------------------------------------------------------------------------
+# Batched dispatch: one device program per tick phase, multi-area, bucketed.
+#
+# All batch operands are padded to a bucket length by REPLICATING LANE 0
+# (adaptive.pad_to_bucket).  Duplicate lanes re-apply lane 0's update with
+# identical values, so every program below is idempotent under padding; hosts
+# simply ignore verdict lanes past the real batch length.  Destination
+# regions are traced operands, so one compiled variant serves every region
+# pairing at a given bucket size.
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, donate_argnames=("state",))
+def begin_areas(state: LeapState, block_ids: jax.Array) -> LeapState:
+    """Open copy epochs for every area scheduled this tick (one dispatch)."""
+    in_flight = state.in_flight.at[block_ids].set(True)
+    dirty = state.dirty.at[block_ids].set(False)
+    return dataclasses.replace(state, in_flight=in_flight, dirty=dirty)
+
+
+@partial(jax.jit, donate_argnames=("state",), static_argnames=("impl",))
+def fused_copy(
+    state: LeapState,
+    src_flat: jax.Array,
+    dst_flat: jax.Array,
+    impl: str | None = None,
+) -> LeapState:
+    """Physical copy of the whole tick's chunk plan in one program.
+
+    ``src_flat``/``dst_flat`` are flat slot ids (``region * S + slot``,
+    host-computed from the exact table mirror), so one compiled variant moves
+    blocks between arbitrary region pairs.  The move itself is the
+    ``leap_copy`` intra-pool kernel: on TPU a scalar-prefetched Pallas kernel
+    that streams one block per grid step, double-buffered so the HBM read of
+    block i+1 overlaps the write of block i; elsewhere the jnp oracle.
+    """
+    flat = flat_pool_view(state.pool)
+    flat = ops.copy_blocks_impl(flat, src_flat, dst_flat, impl=impl)
+    return dataclasses.replace(state, pool=flat.reshape(state.pool.shape))
+
+
+@partial(jax.jit, donate_argnames=("state",))
+def commit_areas(
+    state: LeapState,
+    block_ids: jax.Array,
+    dst_regions: jax.Array,
+    dst_slots: jax.Array,
+) -> tuple[LeapState, jax.Array]:
+    """Atomic remap of every commit-ready area, returning one packed verdict.
+
+    Same per-block semantics as :func:`commit_area`; the host slices the
+    packed verdict vector back into per-area views at known offsets.
+    """
+    verdict = state.dirty[block_ids]  # True => copy invalidated
+    proposed = jnp.stack([dst_regions, dst_slots], axis=1).astype(state.table.dtype)
+    new_entries = jnp.where(verdict[:, None], state.table[block_ids], proposed)
+    table = state.table.at[block_ids].set(new_entries)
+    in_flight = state.in_flight.at[block_ids].set(False)
+    return dataclasses.replace(state, table=table, in_flight=in_flight), verdict
+
+
+@partial(jax.jit, donate_argnames=("state",))
+def force_areas(
+    state: LeapState,
+    block_ids: jax.Array,
+    dst_regions: jax.Array,
+    dst_slots: jax.Array,
+) -> LeapState:
+    """Batched write-through escalation: fused copy+flip for every forced area."""
+    loc = state.table[block_ids]
+    src = state.pool[loc[:, REGION], loc[:, SLOT]]
+    pool = state.pool.at[dst_regions, dst_slots].set(src)
+    entries = jnp.stack([dst_regions, dst_slots], axis=1).astype(state.table.dtype)
+    table = state.table.at[block_ids].set(entries)
+    in_flight = state.in_flight.at[block_ids].set(False)
+    dirty = state.dirty.at[block_ids].set(False)
+    return dataclasses.replace(
+        state, pool=pool, table=table, in_flight=in_flight, dirty=dirty
+    )
+
+
+def _fused_ppermute_local(src_region, dst_region, axis_name, impl, pool, src_slots, dst_slots):
+    # pool arrives as the local shard [1, S, *blk]; flatten the payload to the
+    # [S, rows, cols] kernel layout so the local HBM pack/unpack runs through
+    # the leap_copy Pallas kernels on TPU (jnp oracle elsewhere).
+    flat = flat_pool_view(pool)
+    buf = ops.gather_blocks_impl(flat, src_slots, impl=impl)  # garbage off-src
+    recv = lax.ppermute(buf, axis_name, perm=[(src_region, dst_region)])
+    me = lax.axis_index(axis_name)
+    cur = flat[dst_slots]
+    upd = jnp.where(me == dst_region, recv, cur)  # non-dst shards: no-op write
+    flat = ops.scatter_blocks_impl(flat, dst_slots, upd, impl=impl)
+    return flat.reshape(pool.shape)
+
+
+@partial(
+    jax.jit,
+    donate_argnames=("state",),
+    static_argnames=("src_region", "dst_region", "axis_name", "mesh", "impl"),
+)
+def fused_copy_ppermute(
+    state: LeapState,
+    src_slots: jax.Array,
+    dst_slots: jax.Array,
+    src_region: int,
+    dst_region: int,
+    axis_name: str,
+    mesh: jax.sharding.Mesh,
+    impl: str | None = None,
+) -> LeapState:
+    """Batched point-to-point copy: all of one tick's (src, dst) traffic in a
+    single ppermute of exactly the scheduled bytes (slot ids host-computed)."""
+    fn = _shard_map(
+        partial(_fused_ppermute_local, src_region, dst_region, axis_name, impl),
+        mesh=mesh,
+        in_specs=(P(axis_name), P(), P()),
+        out_specs=P(axis_name),
+    )
+    pool = fn(state.pool, src_slots, dst_slots)
+    return dataclasses.replace(state, pool=pool)
+
+
+# --------------------------------------------------------------------------
+# Compile-cache introspection (control-path cost accounting)
+# --------------------------------------------------------------------------
+
+_PROGRAMS = {
+    "begin_area": begin_area,
+    "copy_chunk": copy_chunk,
+    "copy_chunk_ppermute": copy_chunk_ppermute,
+    "commit_area": commit_area,
+    "force_migrate": force_migrate,
+    "begin_areas": begin_areas,
+    "fused_copy": fused_copy,
+    "commit_areas": commit_areas,
+    "force_areas": force_areas,
+    "fused_copy_ppermute": fused_copy_ppermute,
+}
+
+
+def program_cache_sizes() -> dict[str, int]:
+    """Compiled-variant count per migration program (process-wide).
+
+    Every distinct operand shape that ever hit a program is one cache entry,
+    i.e. one XLA trace+compile; the driver differences this to report
+    ``MigrationStats.jit_cache_misses``.
+    """
+    out = {}
+    for name, fn in _PROGRAMS.items():
+        try:
+            out[name] = fn._cache_size()
+        except AttributeError:  # pragma: no cover - older/newer jax
+            out[name] = 0
+    return out
+
+
+def program_cache_size() -> int:
+    """Total compiled migration-program variants (process-wide)."""
+    return sum(program_cache_sizes().values())

@@ -102,14 +102,26 @@ def init_state(
         )
     if n_blocks > cfg.capacity_blocks:
         raise ValueError("more logical blocks than physical capacity")
-    slots = np.zeros(n_blocks, dtype=np.int32)
-    next_free = np.zeros(cfg.n_regions, dtype=np.int64)
-    for b in range(n_blocks):
-        r = initial_regions[b]
-        slots[b] = next_free[r]
-        next_free[r] += 1
-        if next_free[r] > cfg.slots_per_region:
-            raise ValueError(f"region {r} over capacity during initial placement")
+    if n_blocks and (
+        initial_regions.min() < 0 or initial_regions.max() >= cfg.n_regions
+    ):
+        raise ValueError(
+            f"initial_regions must lie in [0, {cfg.n_regions}), got range "
+            f"[{initial_regions.min()}, {initial_regions.max()}]"
+        )
+    # Dense per-region slot assignment in block-id order, vectorized: a stable
+    # sort groups blocks by region while preserving id order, so the rank of a
+    # block within its group is its slot.
+    counts = np.bincount(initial_regions, minlength=cfg.n_regions)
+    over = np.nonzero(counts > cfg.slots_per_region)[0]
+    if len(over):
+        raise ValueError(f"region {over[0]} over capacity during initial placement")
+    order = np.argsort(initial_regions, kind="stable")
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    slots = np.empty(n_blocks, dtype=np.int32)
+    slots[order] = np.arange(n_blocks, dtype=np.int32) - np.repeat(
+        starts, counts
+    ).astype(np.int32)
     table = jnp.stack(
         [jnp.asarray(initial_regions), jnp.asarray(slots)], axis=1
     ).astype(jnp.int32)
@@ -199,6 +211,21 @@ def leap_write_rows(
 @jax.jit
 def block_regions(state: LeapState, block_ids: jax.Array) -> jax.Array:
     return state.table[block_ids, REGION]
+
+
+def flat_pool_view(pool: jax.Array) -> jax.Array:
+    """Reshape ``pool [R, S, *blk]`` to the kernel layout ``[R*S, rows, cols]``.
+
+    A (region, slot) pair becomes the flat slot ``region * S + slot``; the
+    payload collapses to 2-D (``rows = prod(blk[:-1])``, ``cols = blk[-1]``),
+    which is the shape the ``leap_copy`` Pallas kernels stream block-per-grid-
+    step.  Inside jit the reshape is free (the pool is contiguous).
+    """
+    r, s = pool.shape[:2]
+    payload = pool.shape[2:]
+    rows = int(np.prod(payload[:-1])) if len(payload) > 1 else 1
+    cols = int(payload[-1]) if payload else 1
+    return pool.reshape(r * s, rows, cols)
 
 
 def placement_histogram(state: LeapState, n_regions: int) -> np.ndarray:

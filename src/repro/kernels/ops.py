@@ -29,10 +29,15 @@ def _resolve(impl: str | None) -> tuple[str, bool]:
 
 
 # -- leap_copy ---------------------------------------------------------------
+#
+# The ``*_impl`` functions are the un-jitted dispatchers: the migrator's fused
+# device programs (repro.core.migrator) call them from inside their own jit so
+# TPU gets the scalar-prefetched double-buffered Pallas path without a nested
+# dispatch.  The jitted wrappers below remain the public standalone entry
+# points.
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
-def gather_blocks(pool, idx, *, impl: str | None = None):
+def gather_blocks_impl(pool, idx, *, impl: str | None = None):
     """``pool[idx]``: pack migration blocks into a contiguous staging buffer."""
     kind, interp = _resolve(impl)
     if kind == "pallas":
@@ -40,22 +45,25 @@ def gather_blocks(pool, idx, *, impl: str | None = None):
     return ref.gather_blocks_ref(pool, idx)
 
 
-@functools.partial(jax.jit, static_argnames=("impl",), donate_argnums=(0,))
-def scatter_blocks(pool, idx, blocks, *, impl: str | None = None):
-    """Unpack a staging buffer into pool slots (pool donated: in-place)."""
+def scatter_blocks_impl(pool, idx, blocks, *, impl: str | None = None):
+    """Unpack a staging buffer into pool slots."""
     kind, interp = _resolve(impl)
     if kind == "pallas":
         return leap_copy.scatter_blocks_pallas(pool, idx, blocks, interpret=interp)
     return ref.scatter_blocks_ref(pool, idx, blocks)
 
 
-@functools.partial(jax.jit, static_argnames=("impl",), donate_argnums=(0,))
-def copy_blocks(pool, src_idx, dst_idx, *, impl: str | None = None):
-    """Intra-pool block copy (same-region migration fast path)."""
+def copy_blocks_impl(pool, src_idx, dst_idx, *, impl: str | None = None):
+    """Intra-pool block copy: ``pool[dst_idx[i]] = pool[src_idx[i]]``."""
     kind, interp = _resolve(impl)
     if kind == "pallas":
         return leap_copy.copy_blocks_pallas(pool, src_idx, dst_idx, interpret=interp)
     return ref.copy_blocks_ref(pool, src_idx, dst_idx)
+
+
+gather_blocks = jax.jit(gather_blocks_impl, static_argnames=("impl",))
+scatter_blocks = jax.jit(scatter_blocks_impl, static_argnames=("impl",), donate_argnums=(0,))
+copy_blocks = jax.jit(copy_blocks_impl, static_argnames=("impl",), donate_argnums=(0,))
 
 
 # -- paged decode attention ----------------------------------------------------
