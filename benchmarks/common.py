@@ -67,16 +67,28 @@ def make_pool(
     initial_region: int = 0,
     leap: LeapConfig | None = None,
     seed: int = 0,
+    huge_factor: int = 1,
+    adopt: bool = False,
 ):
-    """A filled leap pool: every region can pool-hold everything (paper setup)."""
+    """A filled leap pool: every region can pool-hold everything (paper setup).
+
+    With ``huge_factor`` G > 1 the pool is two-tier; ``adopt=True`` raises
+    every aligned group to the huge tier in place (the dense initial placement
+    already sits on aligned contiguous runs, so adoption is zero-copy).
+    """
     elems = block_kb * 1024 // 4
-    cfg = PoolConfig(n_regions, n_blocks + 1, (1, elems), jnp.float32)
+    slack = huge_factor if huge_factor > 1 else 1
+    cfg = PoolConfig(
+        n_regions, n_blocks + slack, (1, elems), jnp.float32, huge_factor=huge_factor
+    )
     state = init_state(cfg, n_blocks, np.full(n_blocks, initial_region, np.int32))
     rng = np.random.default_rng(seed)
     data = rng.standard_normal((n_blocks, 1, elems), dtype=np.float32)
     state = leap_write(state, jnp.arange(n_blocks), jnp.asarray(data))
     jax.block_until_ready(state.pool)
     drv = MigrationDriver(state, cfg, leap or LeapConfig())
+    if adopt and huge_factor > 1:
+        drv.adopt_huge(np.arange(n_blocks // huge_factor))
     return cfg, drv, data
 
 

@@ -36,14 +36,16 @@ def _no_migration_throughput(n_blocks, block_kb, per_tick, ticks=60):
     return burst.done / (time.perf_counter() - t0)
 
 
-def _leap(n_blocks, block_kb, per_tick, skew, area_blocks, label):
+def _leap(n_blocks, block_kb, per_tick, skew, area_blocks, label, huge_factor=1):
     lc = LeapConfig(
         initial_area_blocks=area_blocks,
         chunk_blocks=min(area_blocks, 32),
         budget_blocks_per_tick=64,
         max_attempts_before_force=6,
     )
-    _, drv, _ = make_pool(n_blocks, block_kb, leap=lc)
+    _, drv, _ = make_pool(
+        n_blocks, block_kb, leap=lc, huge_factor=huge_factor, adopt=huge_factor > 1
+    )
     burst = WriteBurst(drv, n_blocks, per_tick, skew)
     drv.request(np.arange(n_blocks), 1)
     t0 = time.perf_counter()
@@ -61,6 +63,8 @@ def _leap(n_blocks, block_kb, per_tick, skew, area_blocks, label):
         time=dt, thr=thr, migrated=migrated, retries=drv.stats.dirty_rejections,
         forced=drv.stats.blocks_forced,
         extra_mb=drv.stats.extra_bytes(drv.pool_cfg.block_bytes) / 2**20, ok=ok,
+        demotions=drv.stats.demotions,
+        huge_committed=drv.stats.huge_areas_committed,
     )
 
 
@@ -99,19 +103,25 @@ def _autobalance(n_blocks, block_kb, per_tick, skew, ticks=400):
     return dict(time=done_at or dt, thr=burst.done / dt, migrated=migrated)
 
 
-def run(n_blocks=256, block_kb=64, page_label="small"):
+def run(n_blocks=256, block_kb=64, page_label="small", huge_factor=1):
     total_mb = n_blocks * block_kb / 1024
     for label, per_tick, skew in CASES:
         _no_migration_throughput(n_blocks, block_kb, per_tick, ticks=5)  # warm
         base_thr = _no_migration_throughput(n_blocks, block_kb, per_tick)
         for area in (8, 64):
-            _leap(n_blocks, block_kb, per_tick, skew, area, label)  # warm
-            r = _leap(n_blocks, block_kb, per_tick, skew, area, label)
+            _leap(n_blocks, block_kb, per_tick, skew, area, label, huge_factor)  # warm
+            r = _leap(n_blocks, block_kb, per_tick, skew, area, label, huge_factor)
+            tier = (
+                f";huge_committed={r['huge_committed']};demotions={r['demotions']}"
+                if huge_factor > 1
+                else ""
+            )
             emit(
                 f"fig5_{page_label}/{label}/leap_area{area * block_kb}KB",
                 r["time"] * 1e6,
                 f"thr={100 * r['thr'] / base_thr:.0f}%;migrated={100 * r['migrated'] / n_blocks:.0f}%"
-                f";retries={r['retries']};forced={r['forced']};extra={r['extra_mb']:.1f}MB",
+                f";retries={r['retries']};forced={r['forced']};extra={r['extra_mb']:.1f}MB"
+                + tier,
             )
         _move_pages(n_blocks, block_kb, per_tick, skew)  # warm
         r = _move_pages(n_blocks, block_kb, per_tick, skew)
@@ -131,9 +141,17 @@ def run(n_blocks=256, block_kb=64, page_label="small"):
     return True
 
 
-def run_huge():
-    # "huge pages": 8x larger blocks, fewer of them (paper Fig. 7)
-    return run(n_blocks=64, block_kb=512, page_label="huge")
+def run_huge(real_tier: bool = True):
+    """Paper Fig. 7 companion: migration under writes at huge granularity.
+
+    ``real_tier=True`` (default) runs the actual two-tier pool — 8-slot huge
+    blocks with buddy allocation, run copies, all-or-nothing commits, and
+    §4.2 demotion under pressure.  ``real_tier=False`` keeps the old stand-in
+    (8x larger uniform blocks, no tier interactions) for comparison.
+    """
+    if real_tier:
+        return run(n_blocks=256, block_kb=64, page_label="huge", huge_factor=8)
+    return run(n_blocks=64, block_kb=512, page_label="huge8x")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,141 @@
+"""Paper Fig. 7 — huge-page migration on the real two-tier pool.
+
+Three measurements against the small-only pool (same total bytes):
+
+  * ``drain``     — quiet migration throughput: every huge block moves as ONE
+                    area through one contiguous-run copy (G blocks per grid
+                    step) instead of G per-slot gathers; reports MB/s for
+                    both tiers, the speedup, and dispatches/tick.
+  * ``demotion``  — sustained writes into a subset of huge blocks while the
+                    whole pool migrates: hot huge commits keep rejecting and
+                    demote to small granularity (paper §4.2); cold huge
+                    blocks still commit whole.  Reports demotions, retries,
+                    and final migrated %.
+  * ``promotion`` — coalescing a scattered small pool back into huge blocks
+                    (aligned fully-resident runs only), the §4.2 rule run in
+                    reverse.
+
+Run: ``PYTHONPATH=src:. python benchmarks/fig7_hugepages.py``
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import WriteBurst, emit, make_pool
+from repro.core import LeapConfig
+
+
+def _drain_throughput(n_blocks, block_kb, huge_factor):
+    lc = LeapConfig(initial_area_blocks=64, budget_blocks_per_tick=64)
+    _, drv, _ = make_pool(
+        n_blocks, block_kb, leap=lc, huge_factor=huge_factor, adopt=huge_factor > 1
+    )
+    drv.request(np.arange(n_blocks), 1)
+    t0 = time.perf_counter()
+    ok = drv.drain()
+    jax.block_until_ready(drv.state.pool)
+    dt = time.perf_counter() - t0
+    assert ok and drv.verify_mirror() and drv.verify_tiers()
+    return dt, drv.stats
+
+
+def run_drain(n_blocks=256, block_kb=64, huge_factor=8):
+    total_mb = n_blocks * block_kb / 1024
+    results = {}
+    for label, g in (("small", 1), ("huge", huge_factor)):
+        _drain_throughput(n_blocks, block_kb, g)  # warm the jit caches
+        dt, stats = _drain_throughput(n_blocks, block_kb, g)
+        results[label] = dt
+        extra = ""
+        if g > 1:
+            extra = (
+                f";huge_committed={stats.huge_areas_committed}"
+                f";huge_MB={stats.bytes_copied_huge / 2**20:.1f}"
+                f";speedup=x{results['small'] / dt:.2f}"
+            )
+        emit(
+            f"fig7/drain/{label}",
+            dt * 1e6,
+            f"MBps={total_mb / dt:.0f};disp_per_tick={stats.dispatches_per_tick:.2f}"
+            + extra,
+        )
+    return results
+
+
+def run_demotion(n_blocks=256, block_kb=64, huge_factor=8, per_tick=8):
+    """Write-hot huge blocks demote; cold ones migrate whole."""
+    lc = LeapConfig(
+        initial_area_blocks=64,
+        budget_blocks_per_tick=64,
+        demote_after_attempts=2,
+        max_attempts_before_force=6,
+    )
+    _, drv, _ = make_pool(
+        n_blocks, block_kb, leap=lc, huge_factor=huge_factor, adopt=True
+    )
+    # hot set: the first 2 huge blocks (skew all writes into them)
+    hot = np.arange(2 * huge_factor)
+    rng = np.random.default_rng(7)
+    vals_shape = (per_tick,) + drv.pool_cfg.block_shape
+    drv.request(np.arange(n_blocks), 1)
+    t0 = time.perf_counter()
+    ticks = 0
+    while not drv.done and ticks < 5000:
+        drv.tick()
+        ids = rng.choice(hot, size=per_tick, replace=False)
+        drv.write(
+            jax.numpy.asarray(ids.astype(np.int32)),
+            jax.numpy.asarray(rng.standard_normal(vals_shape, dtype=np.float32)),
+        )
+        ticks += 1
+    ok = drv.drain(10_000)
+    jax.block_until_ready(drv.state.pool)
+    dt = time.perf_counter() - t0
+    migrated = int((drv.host_placement() == 1).sum())
+    assert drv.verify_mirror() and drv.verify_tiers()
+    emit(
+        "fig7/demotion/hot_writes",
+        dt * 1e6,
+        f"migrated={100 * migrated / n_blocks:.0f}%"
+        f";demotions={drv.stats.demotions}"
+        f";huge_committed={drv.stats.huge_areas_committed}"
+        f";retries={drv.stats.dirty_rejections};forced={drv.stats.blocks_forced}"
+        f";ok={ok}",
+    )
+    return drv.stats
+
+
+def run_promotion(n_blocks=128, block_kb=64, huge_factor=8):
+    """Scatter a small pool via random migration churn, then coalesce."""
+    lc = LeapConfig(initial_area_blocks=32, budget_blocks_per_tick=64)
+    _, drv, _ = make_pool(n_blocks, block_kb, leap=lc, huge_factor=huge_factor)
+    rng = np.random.default_rng(3)
+    for _ in range(4):  # churn placements so member slots scatter
+        ids = rng.choice(n_blocks, size=n_blocks // 2, replace=False)
+        drv.request(ids, int(rng.integers(0, 2)))
+        drv.drain()
+    t0 = time.perf_counter()
+    promoted = sum(drv.promote_group(g) for g in drv.promote_candidates())
+    jax.block_until_ready(drv.state.pool)
+    dt = time.perf_counter() - t0
+    assert drv.verify_mirror() and drv.verify_tiers()
+    emit(
+        "fig7/promotion/coalesce",
+        dt * 1e6,
+        f"promoted={promoted}/{n_blocks // huge_factor}"
+        f";promotions={drv.stats.promotions}",
+    )
+    return promoted
+
+
+def run(n_blocks=256, block_kb=64, huge_factor=8):
+    run_drain(n_blocks, block_kb, huge_factor)
+    run_demotion(n_blocks, block_kb, huge_factor)
+    run_promotion(n_blocks // 2, block_kb, huge_factor)
+    return True
+
+
+if __name__ == "__main__":
+    run()

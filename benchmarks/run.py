@@ -17,8 +17,10 @@ SUITES = [
     ("fig5_concurrent", "run", {}),
     ("fig5_concurrent", "run_huge", {}),
     ("fig6_sustained", "run", {}),
+    ("fig7_hugepages", "run", {}),
     ("table2_overhead", "run", {}),
     ("fig8_tpch", "run", {}),
+    ("fig9_dispatch", "run", {}),
     ("serving_rebalance", "run", {}),
 ]
 

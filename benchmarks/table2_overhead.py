@@ -55,6 +55,40 @@ def run(n_blocks=256, block_kb=64, per_tick=8):
             f";disp_per_tick={drv.stats.dispatches_per_tick:.2f}"
             f";jit_misses={drv.stats.jit_cache_misses}",
         )
+
+    # Two-tier pool: same workload at huge granularity, reporting the
+    # per-tier MigrationStats counters (huge commits / demotions / promotions
+    # / contiguous-run copy traffic).
+    G = 8
+    lc = LeapConfig(
+        initial_area_blocks=64,
+        budget_blocks_per_tick=64,
+        demote_after_attempts=2,
+        max_attempts_before_force=8,
+    )
+    _, drv, _ = make_pool(n_blocks, block_kb, leap=lc, huge_factor=G, adopt=True)
+    burst = WriteBurst(drv, n_blocks, per_tick)
+    drv.request(np.arange(n_blocks), 1)
+    t0 = time.perf_counter()
+    while not drv.done:
+        drv.tick()
+        burst.fire()
+    drv.drain()
+    jax.block_until_ready(drv.state.pool)
+    dt = time.perf_counter() - t0
+    s = drv.stats
+    extra = s.extra_bytes(drv.pool_cfg.block_bytes)
+    emit(
+        f"table2/huge_tier_{G * block_kb}KB",
+        dt * 1e6,
+        f"mem_overhead={100 * extra / (useful_mb * 2**20):.1f}%"
+        f";huge_committed={s.huge_areas_committed}"
+        f";demotions={s.demotions}"
+        f";promotions={s.promotions}"
+        f";huge_MB={s.bytes_copied_huge / 2**20:.1f}"
+        f";retries={s.dirty_rejections}"
+        f";disp_per_tick={s.dispatches_per_tick:.2f}",
+    )
     return True
 
 

@@ -6,6 +6,9 @@ from repro.core.state import (
     SLOT,
     LeapState,
     PoolConfig,
+    group_dirty,
+    group_in_flight,
+    huge_read,
     init_state,
     leap_read,
     leap_write,
@@ -17,6 +20,7 @@ from repro.core.adaptive import (
     Area,
     bucket_size,
     decompose_request,
+    demote_area,
     pad_to_bucket,
     split_area,
 )
@@ -40,9 +44,13 @@ __all__ = [
     "leap_write_rows",
     "placement_histogram",
     "state_sharding",
+    "group_dirty",
+    "group_in_flight",
+    "huge_read",
     "Area",
     "bucket_size",
     "decompose_request",
+    "demote_area",
     "pad_to_bucket",
     "split_area",
     "FreeList",

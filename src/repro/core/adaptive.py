@@ -22,7 +22,8 @@ import dataclasses
 import numpy as np
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)  # identity equality: mutable work item,
+# and the generated __eq__ would compare ndarray fields (ambiguous truth)
 class Area:
     """A unit of migration: a set of logical blocks headed to one region.
 
@@ -36,6 +37,7 @@ class Area:
     src_region: int
     dst_region: int
     attempts: int = 0
+    huge: bool = False  # one huge block: G aligned members, run copy, all-or-nothing commit
     # Filled by the driver when the area's epoch opens:
     dst_slots: np.ndarray | None = None
     copied: int = 0  # number of blocks already copied this epoch
@@ -110,6 +112,37 @@ def split_area(
                 src_region=area.src_region,
                 dst_region=area.dst_region,
                 attempts=area.attempts + 1,
+            )
+        )
+    return out
+
+
+def demote_area(
+    area: Area, reduction_factor: int, min_area_blocks: int
+) -> list[Area]:
+    """Paper §4.2 demotion: retry a rejected huge area at small granularity.
+
+    The huge block could not commit atomically (every rejection means *some*
+    member kept being written during the run's copy epoch), so the whole run
+    is requeued as small areas: clean members now commit independently while
+    the write-hot ones keep splitting down — exactly the small-page behaviour
+    the huge mapping was suppressing.  Attempts carry over so write-through
+    escalation still bounds the total retry count.
+    """
+    if not area.huge:
+        raise ValueError("demote_area expects a huge area")
+    target = max(len(area) // reduction_factor, min_area_blocks, 1)
+    out = []
+    for start in range(0, len(area), target):
+        out.append(
+            Area(
+                block_ids=np.asarray(
+                    area.block_ids[start : start + target], dtype=np.int32
+                ),
+                src_region=area.src_region,
+                dst_region=area.dst_region,
+                attempts=area.attempts,
+                huge=False,
             )
         )
     return out

@@ -36,10 +36,12 @@ from repro.core.adaptive import (
     Area,
     bucket_size,
     decompose_request,
+    demote_area,
     pad_to_bucket,
     split_area,
 )
 from repro.core.state import REGION, SLOT, LeapState, PoolConfig, leap_read, leap_write, leap_write_rows
+from repro.pool import BuddyAllocator, PromotionPolicy, TwoLevelTable
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +59,10 @@ class LeapConfig:
     fused_dispatch: bool = True  # batch each tick into <=3 device programs
     bucket_growth: int = 4  # geometric padding factor for batch shapes
     copy_impl: str | None = None  # leap_copy impl: None=auto|"pallas"|"ref"
+    # Two-tier pool knobs (active when PoolConfig.huge_factor > 1):
+    demote_after_attempts: int = 2  # huge-commit rejections before demotion (§4.2)
+    promote_cold_ticks: int = 0  # ticks since last write required to promote
+    promote_per_tick: int = 0  # auto-promotions attempted per tick (0 = manual)
 
 
 @dataclasses.dataclass
@@ -70,6 +76,11 @@ class MigrationStats:
     dispatches: int = 0
     ticks: int = 0
     jit_cache_misses: int = 0  # migration-program compiles since driver init
+    # per-tier counters (two-tier pool; all zero on a small-only pool)
+    huge_areas_committed: int = 0  # huge blocks remapped atomically as one run
+    demotions: int = 0  # huge blocks split to small under write pressure/fragmentation
+    promotions: int = 0  # aligned cold runs coalesced into huge blocks
+    bytes_copied_huge: int = 0  # copy traffic moved via contiguous-run programs
 
     def extra_bytes(self, block_bytes: int) -> int:
         useful = (self.blocks_migrated + self.blocks_forced) * block_bytes
@@ -163,11 +174,29 @@ class MigrationDriver:
         self._table = np.asarray(state.table).copy()
         free_mask = np.ones((pool_cfg.n_regions, pool_cfg.slots_per_region), bool)
         free_mask[self._table[:, REGION], self._table[:, SLOT]] = False
-        # store descending so the LIFO top hands out the lowest slot first
-        self._free: list[FreeList] = [
-            FreeList(np.nonzero(free_mask[r])[0][::-1])
-            for r in range(pool_cfg.n_regions)
-        ]
+        if pool_cfg.huge_factor > 1:
+            # Two-tier pool: per-region buddy allocators (FreeList-compatible
+            # for order-0 traffic) + the level-1 table.  All groups start
+            # small; promote_group / adopt_huge raise them.
+            if self.cfg.backend == "ppermute":
+                raise ValueError("the two-tier pool requires the xla copy backend")
+            self._free = []
+            for r in range(pool_cfg.n_regions):
+                buddy = BuddyAllocator(pool_cfg.slots_per_region, pool_cfg.huge_factor)
+                buddy.reserve(np.nonzero(~free_mask[r])[0])
+                self._free.append(buddy)
+            self.tiers: TwoLevelTable | None = TwoLevelTable(
+                state.n_blocks, pool_cfg.huge_factor
+            )
+            self._policy = PromotionPolicy(cold_ticks=self.cfg.promote_cold_ticks)
+            self._last_write = np.full(state.n_blocks, -(1 << 40), dtype=np.int64)
+        else:
+            # store descending so the LIFO top hands out the lowest slot first
+            self._free = [
+                FreeList(np.nonzero(free_mask[r])[0][::-1])
+                for r in range(pool_cfg.n_regions)
+            ]
+            self.tiers = None
         self._queue: deque[Area] = deque()
         self._active: list[Area] = []
         self._pending: list[_CommitBatch] = []
@@ -180,9 +209,11 @@ class MigrationDriver:
         return leap_read(self.state, jax.numpy.asarray(block_ids))
 
     def write(self, block_ids, values) -> None:
+        self._note_writes(block_ids)
         self.state = leap_write(self.state, jax.numpy.asarray(block_ids), values)
 
     def write_rows(self, block_ids, row_offsets, rows) -> None:
+        self._note_writes(block_ids)
         self.state = leap_write_rows(
             self.state,
             jax.numpy.asarray(block_ids),
@@ -190,33 +221,56 @@ class MigrationDriver:
             rows,
         )
 
+    def _note_writes(self, block_ids) -> None:
+        """Stamp write recency (promotion coldness gate on the tiered pool)."""
+        if self.tiers is not None:
+            self._last_write[np.asarray(block_ids)] = self.stats.ticks
+
     # -- migration API ------------------------------------------------------
 
     def request(self, block_ids, dst_region: int) -> int:
         """Enqueue migration of ``block_ids`` to ``dst_region``.
 
         Blocks already at the destination or already under migration are
-        skipped (duplicates within one call are deduplicated).  Returns the
-        number of blocks actually enqueued.
+        skipped (duplicates within one call are deduplicated).  On a tiered
+        pool, a request touching any member of a huge block migrates the
+        whole block as ONE huge area (the level-1 entry is the migration
+        unit, exactly like a huge page).  Returns the number of blocks
+        actually enqueued (huge areas count all their members).
         """
         block_ids = np.unique(np.asarray(block_ids, dtype=np.int32))
+        enqueued = 0
+        if self.tiers is not None:
+            hmask = self.tiers.is_huge(block_ids)
+            for g in np.unique(self.tiers.group_of(block_ids[hmask])):
+                enqueued += self._request_huge(int(g), dst_region)
+            block_ids = block_ids[~hmask]
         mask = (self._table[block_ids, REGION] != dst_region) & ~self._migrating[
             block_ids
         ]
         block_ids = block_ids[mask]
-        if len(block_ids) == 0:
+        if len(block_ids):
+            self._migrating[block_ids] = True
+            self.stats.blocks_requested += len(block_ids)
+            # Group by current source region (areas are single-source so the
+            # ppermute backend has static endpoints).
+            srcs = self._table[block_ids, REGION]
+            for src in np.unique(srcs):
+                ids = block_ids[srcs == src]
+                self._queue.extend(
+                    decompose_request(ids, int(src), dst_region, self.cfg.initial_area_blocks)
+                )
+        return enqueued + len(block_ids)
+
+    def _request_huge(self, g: int, dst_region: int) -> int:
+        members = self.tiers.members(g)
+        src = int(self._table[members[0], REGION])
+        if src == dst_region or self._migrating[members].any():
             return 0
-        self._migrating[block_ids] = True
-        self.stats.blocks_requested += len(block_ids)
-        # Group by current source region (areas are single-source so the
-        # ppermute backend has static endpoints).
-        srcs = self._table[block_ids, REGION]
-        for src in np.unique(srcs):
-            ids = block_ids[srcs == src]
-            self._queue.extend(
-                decompose_request(ids, int(src), dst_region, self.cfg.initial_area_blocks)
-            )
-        return len(block_ids)
+        self._migrating[members] = True
+        self.stats.blocks_requested += len(members)
+        self._queue.append(Area(members, src, dst_region, huge=True))
+        return len(members)
 
     @property
     def done(self) -> bool:
@@ -225,7 +279,7 @@ class MigrationDriver:
     @property
     def pending_blocks(self) -> int:
         n = sum(len(a) for a in self._queue) + sum(len(a) for a in self._active)
-        n += sum(batch.offsets[-1] for batch in self._pending)
+        n += sum(len(a) for batch in self._pending for a in batch.areas)
         return int(n)
 
     # -- the migration loop --------------------------------------------------
@@ -249,18 +303,33 @@ class MigrationDriver:
         fused = self.cfg.fused_dispatch
         ready = [a for a in self._active if a.copied == len(a)]
         if fused:
-            self._dispatch_commit_batch(ready)
+            self._dispatch_commit_batch([a for a in ready if not a.huge])
+            self._dispatch_commit_groups([a for a in ready if a.huge])
         else:
             for area in ready:
-                self._dispatch_commit(area)
+                if area.huge:
+                    self._dispatch_commit_groups([area])
+                else:
+                    self._dispatch_commit(area)
 
         budget = self.cfg.budget_blocks_per_tick
         opened: list[Area] = []  # epochs opened this tick (fused: batch begin)
         forced: list[Area] = []  # escalations this tick (fused: batch force)
         plan: list[tuple[Area, np.ndarray, np.ndarray]] = []  # copy chunks
+        run_plan: list[Area] = []  # huge areas copied as whole contiguous runs
         while budget > 0:
             area = self._next_copyable()
             if area is not None:
+                if area.huge:
+                    # A huge block copies as ONE contiguous-run move — never
+                    # chunked, whatever the budget has left (it was admitted).
+                    if fused:
+                        run_plan.append(area)
+                    else:
+                        self._dispatch_copy_runs([area])
+                    budget -= len(area) - area.copied
+                    area.copied = len(area)
+                    continue
                 per_area = len(area) - area.copied if fused else self.cfg.chunk_blocks
                 n = min(per_area, len(area) - area.copied, budget)
                 ids = area.block_ids[area.copied : area.copied + n]
@@ -284,6 +353,10 @@ class MigrationDriver:
             self._dispatch_begin_batch(opened)
             self._dispatch_force_batch(forced)
             self._dispatch_copy_batch(plan)
+            self._dispatch_copy_runs(run_plan)
+        if self.cfg.promote_per_tick and self.tiers is not None:
+            for g in self.promote_candidates(self.cfg.promote_per_tick):
+                self.promote_group(g)
         self.stats.jit_cache_misses = (
             migrator.program_cache_size() - self._cache_baseline
         )
@@ -314,6 +387,8 @@ class MigrationDriver:
         return self._free[region].take(n)
 
     def _open_epoch(self, area: Area, opened: list[Area], forced: list[Area]) -> bool:
+        if area.huge:
+            return self._open_epoch_huge(area, opened)
         slots = self._alloc(area.dst_region, len(area))
         if slots is None:
             # Not enough pooled slots for the whole area right now.  If the
@@ -348,6 +423,39 @@ class MigrationDriver:
             return True
         if self.cfg.fused_dispatch:
             opened.append(area)  # begin batched at end of tick, before copies
+        else:
+            self.state = migrator.begin_area(
+                self.state, jax.numpy.asarray(area.block_ids)
+            )
+            self.stats.dispatches += 1
+        self._active.append(area)
+        return True
+
+    def _open_epoch_huge(self, area: Area, opened: list[Area]) -> bool:
+        """Open a huge area's epoch: reserve one aligned run at the destination.
+
+        If the destination has >= G free slots but no contiguous run
+        (fragmentation), or the pipeline is empty and can never free one, the
+        huge block demotes and retries at small granularity — the second half
+        of the paper's §4.2 rule.
+        """
+        g = int(area.block_ids[0]) // self.pool_cfg.huge_factor
+        start = self._free[area.dst_region].take_run()
+        if start is None:
+            fragmented = len(self._free[area.dst_region]) >= self.pool_cfg.huge_factor
+            stalled = not self._active and not self._pending
+            if fragmented or stalled:
+                self._demote_group(g)
+                self._queue.extend(
+                    demote_area(area, self.cfg.reduction_factor, self.cfg.min_area_blocks)
+                )
+                return True
+            self._queue.appendleft(area)
+            return False
+        area.dst_slots = start + np.arange(self.pool_cfg.huge_factor, dtype=np.int32)
+        area.copied = 0
+        if self.cfg.fused_dispatch:
+            opened.append(area)  # members share the tick's begin batch
         else:
             self.state = migrator.begin_area(
                 self.state, jax.numpy.asarray(area.block_ids)
@@ -465,6 +573,63 @@ class MigrationDriver:
             self._active.remove(a)
         self._pending.append(_CommitBatch(ready, offsets, verdict))
 
+    # -- huge-tier dispatch (contiguous runs + grouped commits) ----------------
+
+    def _dispatch_copy_runs(self, run_plan: list[Area]) -> None:
+        """One device program copies every huge block scheduled this tick —
+        each as a single contiguous-run move, not G per-slot gathers."""
+        if not run_plan:
+            return
+        G = self.pool_cfg.huge_factor
+        s_per = self.pool_cfg.slots_per_region
+        nbytes = len(run_plan) * G * self.pool_cfg.block_bytes
+        self.stats.bytes_copied += nbytes
+        self.stats.bytes_copied_huge += nbytes
+        firsts = np.asarray([a.block_ids[0] for a in run_plan])
+        src = (self._table[firsts, REGION] * s_per + self._table[firsts, SLOT]).astype(
+            np.int32
+        )
+        dst = np.asarray(
+            [a.dst_region * s_per + a.dst_slots[0] for a in run_plan], np.int32
+        )
+        src, dst = self._pad(src, dst)
+        self.state = migrator.fused_copy_runs(
+            self.state,
+            jax.numpy.asarray(src),
+            jax.numpy.asarray(dst),
+            run=G,
+            impl=self.cfg.copy_impl,
+        )
+        self.stats.dispatches += 1
+
+    def _dispatch_commit_groups(self, ready: list[Area]) -> None:
+        """All-or-nothing commit of every copy-complete huge area (one program,
+        one verdict lane per huge block)."""
+        if not ready:
+            return
+        G = self.pool_cfg.huge_factor
+        k = len(ready)
+        bucket = bucket_size(k, self.cfg.bucket_growth)
+        members = np.concatenate([a.block_ids for a in ready]).reshape(k, G)
+        regions = np.asarray([a.dst_region for a in ready], np.int32)
+        starts = np.asarray([a.dst_slots[0] for a in ready], np.int32)
+        # pad by replicating lane-0's whole GROUP (idempotent duplicate remap)
+        members = np.concatenate([members, np.repeat(members[:1], bucket - k, axis=0)])
+        regions, starts = pad_to_bucket(bucket, regions, starts)
+        self.state, verdict = migrator.commit_groups(
+            self.state,
+            jax.numpy.asarray(members.reshape(-1)),
+            jax.numpy.asarray(regions),
+            jax.numpy.asarray(starts),
+            group=G,
+        )
+        self.stats.dispatches += 1
+        for a in ready:
+            self._active.remove(a)
+        self._pending.append(
+            _CommitBatch(ready, np.arange(k + 1), verdict)  # 1 lane per area
+        )
+
     # -- legacy per-area dispatch (fused_dispatch=False baseline) -------------
 
     def _dispatch_copy(self, area: Area, ids: np.ndarray, slots: np.ndarray) -> None:
@@ -523,6 +688,9 @@ class MigrationDriver:
         self._pending = still
 
     def _process_verdict(self, area: Area, dirty: np.ndarray) -> None:
+        if area.huge:
+            self._process_verdict_huge(area, bool(dirty[0]))
+            return
         clean = ~dirty
         # Clean blocks: the remap took effect on device; mirror it.
         self._remap_host(area.block_ids[clean], area.dst_region, area.dst_slots[clean])
@@ -535,6 +703,45 @@ class MigrationDriver:
             subs = split_area(area, dirty, self.cfg.reduction_factor, self.cfg.min_area_blocks)
             self.stats.splits += max(0, len(subs) - 1)
             self._queue.extend(subs)
+
+    def _process_verdict_huge(self, area: Area, is_dirty: bool) -> None:
+        """Huge commits are all-or-nothing: remap the run, or retry/demote."""
+        G = self.pool_cfg.huge_factor
+        g = int(area.block_ids[0]) // G
+        if not is_dirty:
+            ids = area.block_ids
+            old_region = int(self._table[ids[0], REGION])
+            old_start = int(self._table[ids[0], SLOT])
+            self._free[old_region].free_run(old_start)
+            self._table[ids, REGION] = area.dst_region
+            self._table[ids, SLOT] = area.dst_slots
+            self._migrating[ids] = False
+            self.tiers.relocate(g, area.dst_region, int(area.dst_slots[0]))
+            self.stats.blocks_migrated += G
+            self.stats.huge_areas_committed += 1
+            return
+        # Rejected: a member was written during the run's copy epoch.  Free
+        # the reserved destination run and either retry the run whole or —
+        # after demote_after_attempts rejections (sustained write pressure) —
+        # split the huge block and retry at small granularity (paper §4.2).
+        self.stats.dirty_rejections += G
+        self._free[area.dst_region].free_run(int(area.dst_slots[0]))
+        area.attempts += 1
+        area.dst_slots = None
+        if area.attempts >= self.cfg.demote_after_attempts:
+            self._demote_group(g)
+            subs = demote_area(area, self.cfg.reduction_factor, self.cfg.min_area_blocks)
+            self.stats.splits += max(0, len(subs) - 1)
+            self._queue.extend(subs)
+        else:
+            self._queue.append(area)
+
+    def _demote_group(self, g: int) -> None:
+        """Split a huge block into G small blocks (host metadata; bytes stay)."""
+        region, start = (int(x) for x in self.tiers.huge_loc[g])
+        self._free[region].split_allocated(start)
+        self.tiers.demote(g)
+        self.stats.demotions += 1
 
     def _finalize_success(self, area: Area) -> None:
         # Force path: all blocks flipped on device; mirror and free sources.
@@ -551,6 +758,82 @@ class MigrationDriver:
         self._table[ids, SLOT] = dst_slots
         self._migrating[ids] = False
 
+    # -- tier transitions (two-tier pool) --------------------------------------
+
+    def promote_candidates(self, limit: int | None = None) -> list[int]:
+        """Groups currently eligible for promotion (aligned, resident, cold)."""
+        if self.tiers is None:
+            return []
+        out = self._policy.candidates(
+            self.tiers, self._table, self._migrating, self._last_write, self.stats.ticks
+        )
+        return out[:limit] if limit is not None else out
+
+    def promote_group(self, g: int) -> bool:
+        """Coalesce group ``g``'s G small blocks into one huge block.
+
+        Requires the policy's aligned/fully-resident/cold checks and a free
+        run in the group's region; the compaction copy+remap goes through the
+        atomic force program, so no epoch (and no race window) is needed.
+        Returns False (no state change) when ineligible or out of runs.
+        """
+        if self.tiers is None:
+            return False
+        if not self._policy.eligible(
+            g, self.tiers, self._table, self._migrating, self._last_write, self.stats.ticks
+        ):
+            return False
+        members = self.tiers.members(g)
+        region = int(self._table[members[0], REGION])
+        start = self._free[region].take_run()
+        if start is None:
+            return False
+        G = self.pool_cfg.huge_factor
+        dst_slots = start + np.arange(G, dtype=np.int32)
+        self.state = migrator.force_areas(
+            self.state,
+            jax.numpy.asarray(members),
+            jax.numpy.asarray(np.full(G, region, np.int32)),
+            jax.numpy.asarray(dst_slots),
+        )
+        self.stats.dispatches += 1
+        self.stats.bytes_copied += G * self.pool_cfg.block_bytes
+        # take_run left the destination live as one huge allocation; the old
+        # scattered member slots free individually and coalesce.
+        self._free[region].put(self._table[members, SLOT])
+        self._table[members, SLOT] = dst_slots
+        self.tiers.promote(g, region, start)
+        self.stats.promotions += 1
+        return True
+
+    def adopt_huge(self, group_ids) -> int:
+        """Zero-copy promotion of groups whose members already sit on aligned
+        contiguous runs (e.g. straight out of ``init_state``'s dense
+        placement).  Pure host metadata; returns the number adopted.
+        """
+        if self.tiers is None:
+            return 0
+        G = self.pool_cfg.huge_factor
+        adopted = 0
+        for g in np.asarray(group_ids, dtype=np.int64):
+            g = int(g)
+            members = self.tiers.members(g)
+            if self.tiers.tier[g] or self._migrating[members].any():
+                continue
+            region = self._table[members, REGION]
+            start = int(self._table[members[0], SLOT])
+            contiguous = (
+                (region == region[0]).all()
+                and start % G == 0
+                and (self._table[members, SLOT] == start + np.arange(G)).all()
+            )
+            if not contiguous:
+                continue
+            self._free[int(region[0])].merge_allocated(start)
+            self.tiers.promote(g, int(region[0]), start)
+            adopted += 1
+        return adopted
+
     # -- introspection ---------------------------------------------------------
 
     def host_placement(self) -> np.ndarray:
@@ -559,3 +842,13 @@ class MigrationDriver:
     def verify_mirror(self) -> bool:
         """Debug: host table mirror must match device table exactly."""
         return bool(np.array_equal(self._table, np.asarray(self.state.table)))
+
+    def verify_tiers(self) -> bool:
+        """Debug: level-1 table consistent with the flat mirror, and every
+        region's buddy allocator satisfies its invariants."""
+        if self.tiers is None:
+            return True
+        self.tiers.check_consistent(self._table)
+        for f in self._free:
+            f.check()
+        return True

@@ -225,6 +225,60 @@ def fused_copy(
     return dataclasses.replace(state, pool=flat.reshape(state.pool.shape))
 
 
+@partial(jax.jit, donate_argnames=("state",), static_argnames=("run", "impl"))
+def fused_copy_runs(
+    state: LeapState,
+    src_starts: jax.Array,
+    dst_starts: jax.Array,
+    run: int,
+    impl: str | None = None,
+) -> LeapState:
+    """Physical copy of whole huge blocks: one contiguous-run move per block.
+
+    ``src_starts``/``dst_starts`` are flat slot ids of each run's first slot
+    (``region * S + start``; G-aligned and intra-region because the buddy
+    allocator hands out aligned runs and G divides S).  A huge block moves as
+    ONE area through ONE kernel step — ``run * rows`` sublanes per grid step
+    via ``copy_runs`` — instead of ``run`` per-slot gathers.
+    """
+    flat = flat_pool_view(state.pool)
+    flat = ops.copy_runs_impl(flat, src_starts, dst_starts, run=run, impl=impl)
+    return dataclasses.replace(state, pool=flat.reshape(state.pool.shape))
+
+
+@partial(jax.jit, donate_argnames=("state",), static_argnames=("group",))
+def commit_groups(
+    state: LeapState,
+    block_ids: jax.Array,
+    dst_regions: jax.Array,
+    dst_starts: jax.Array,
+    group: int,
+) -> tuple[LeapState, jax.Array]:
+    """All-or-nothing remap of huge areas; one verdict lane per group.
+
+    ``block_ids`` is ``[K * group]`` (K huge areas' members, group-major);
+    ``dst_regions``/``dst_starts`` are ``[K]`` level-1 destinations.  A group
+    is dirty iff ANY member was written during the copy epoch — a huge entry
+    maps all its small blocks at once, so a partially-stale run cannot flip
+    (mirroring a huge-page PTE: there is no per-4K remap under a 2M mapping).
+    Padding replicates lane-0's whole GROUP, which keeps the program
+    idempotent under duplicate lanes just like the per-block programs.
+    """
+    k = dst_starts.shape[0]
+    members = block_ids.reshape(k, group)
+    verdict = state.dirty[members].any(axis=1)  # True => whole run invalidated
+    member_slots = dst_starts[:, None] + jnp.arange(group)[None, :]
+    proposed = jnp.stack(
+        [jnp.broadcast_to(dst_regions[:, None], (k, group)), member_slots], axis=-1
+    ).astype(state.table.dtype)
+    new_entries = jnp.where(
+        verdict[:, None, None], state.table[members], proposed
+    )
+    table = state.table.at[members.reshape(-1)].set(new_entries.reshape(-1, 2))
+    in_flight = state.in_flight.at[block_ids].set(False)
+    return dataclasses.replace(state, table=table, in_flight=in_flight), verdict
+
+
 @partial(jax.jit, donate_argnames=("state",))
 def commit_areas(
     state: LeapState,
@@ -318,7 +372,9 @@ _PROGRAMS = {
     "force_migrate": force_migrate,
     "begin_areas": begin_areas,
     "fused_copy": fused_copy,
+    "fused_copy_runs": fused_copy_runs,
     "commit_areas": commit_areas,
+    "commit_groups": commit_groups,
     "force_areas": force_areas,
     "fused_copy_ppermute": fused_copy_ppermute,
 }

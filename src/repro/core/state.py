@@ -43,6 +43,11 @@ class PoolConfig:
       dtype: payload dtype.
       region_axis: mesh axis name the region dim is sharded over, or None for
         single-device operation (tests / benches).
+      huge_factor: G — small slots per huge block (two-tier pool; 1 = small
+        only).  A huge block is G physically-contiguous, G-aligned slots in
+        one region whose G logical blocks share one level-1 table entry (see
+        repro.pool and DESIGN.md §5).  Must be a power of two dividing
+        slots_per_region so huge runs never straddle a region boundary.
     """
 
     n_regions: int
@@ -50,6 +55,17 @@ class PoolConfig:
     block_shape: tuple[int, ...]
     dtype: jnp.dtype = jnp.float32
     region_axis: str | tuple[str, ...] | None = None
+    huge_factor: int = 1
+
+    def __post_init__(self):
+        g = self.huge_factor
+        if g < 1 or (g & (g - 1)) != 0:
+            raise ValueError(f"huge_factor must be a power of two, got {g}")
+        if self.slots_per_region % g != 0:
+            raise ValueError(
+                f"huge_factor {g} must divide slots_per_region "
+                f"{self.slots_per_region}"
+            )
 
     @property
     def block_elems(self) -> int:
@@ -211,6 +227,47 @@ def leap_write_rows(
 @jax.jit
 def block_regions(state: LeapState, block_ids: jax.Array) -> jax.Array:
     return state.table[block_ids, REGION]
+
+
+# --------------------------------------------------------------------------
+# Tier-aware (group) semantics.
+#
+# A huge block is G logical blocks [g*G, (g+1)*G) whose table entries expand
+# to one contiguous slot run, so the flat table/dirty/in_flight vectors keep
+# working per block; the group views below are the level-1 semantics: a huge
+# read is one contiguous slice, and a huge copy epoch is dirtied by a write
+# to *any* member (the commit verdict is the OR over the run, exactly like a
+# huge-page PTE covering G small pages).
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("huge_factor",))
+def huge_read(state: LeapState, group_ids: jax.Array, huge_factor: int) -> jax.Array:
+    """Read whole huge blocks: ``[len(group_ids), G, *block_shape]``.
+
+    Resolves one level-1 entry (member 0's location) per group and slices the
+    contiguous run — G blocks per table lookup instead of G lookups.
+    """
+    first = group_ids * huge_factor
+    loc = state.table[first]
+    slots = loc[:, SLOT, None] + jnp.arange(huge_factor)[None, :]
+    return state.pool[loc[:, REGION, None], slots]
+
+
+@partial(jax.jit, static_argnames=("huge_factor",))
+def group_dirty(state: LeapState, group_ids: jax.Array, huge_factor: int) -> jax.Array:
+    """Level-1 dirty view: a group is dirty iff any member is dirty."""
+    members = group_ids[:, None] * huge_factor + jnp.arange(huge_factor)[None, :]
+    return state.dirty[members].any(axis=1)
+
+
+@partial(jax.jit, static_argnames=("huge_factor",))
+def group_in_flight(
+    state: LeapState, group_ids: jax.Array, huge_factor: int
+) -> jax.Array:
+    """Level-1 in-flight view: a group is in flight iff any member is."""
+    members = group_ids[:, None] * huge_factor + jnp.arange(huge_factor)[None, :]
+    return state.in_flight[members].any(axis=1)
 
 
 def flat_pool_view(pool: jax.Array) -> jax.Array:

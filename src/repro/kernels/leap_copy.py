@@ -134,3 +134,45 @@ def copy_blocks_pallas(
         input_output_aliases={2: 0},  # pool aliased to output
         interpret=interpret,
     )(src_idx, dst_idx, pool)
+
+
+def copy_runs_pallas(
+    pool: jax.Array,
+    src_starts: jax.Array,
+    dst_starts: jax.Array,
+    run: int,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Contiguous-run copy: ``pool[dst_starts[i] : +run] = pool[src_starts[i] : +run]``.
+
+    The huge-block fast path of a two-tier migration: one grid step moves a
+    whole ``run``-slot huge block (``run * rows`` sublanes per DMA instead of
+    ``run`` separate per-slot gathers), double-buffered like the per-block
+    kernel.  Starts must be ``run``-aligned — guaranteed by the buddy
+    allocator, and required because the BlockSpec addresses run-sized tiles.
+    """
+    if pool.ndim != 3:
+        raise ValueError(f"pool must be [slots, rows, cols], got {pool.shape}")
+    s, r, d = pool.shape
+    if run < 1 or s % run != 0:
+        raise ValueError(f"run {run} must divide slot count {s}")
+    k = src_starts.shape[0]
+    # index_map addresses (run, r, d)-shaped tiles, so pass run-unit indices.
+    src_tiles = src_starts // run
+    dst_tiles = dst_starts // run
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((run, r, d), lambda i, src_ref, dst_ref: (src_ref[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((run, r, d), lambda i, src_ref, dst_ref: (dst_ref[i], 0, 0)),
+    )
+    return pl.pallas_call(
+        _copy_pool_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, r, d), pool.dtype),
+        input_output_aliases={2: 0},  # pool aliased to output
+        interpret=interpret,
+    )(src_tiles, dst_tiles, pool)

@@ -61,9 +61,20 @@ def copy_blocks_impl(pool, src_idx, dst_idx, *, impl: str | None = None):
     return ref.copy_blocks_ref(pool, src_idx, dst_idx)
 
 
+def copy_runs_impl(pool, src_starts, dst_starts, *, run: int, impl: str | None = None):
+    """Contiguous-run copy: one huge block (``run`` aligned slots) per step."""
+    kind, interp = _resolve(impl)
+    if kind == "pallas":
+        return leap_copy.copy_runs_pallas(
+            pool, src_starts, dst_starts, run, interpret=interp
+        )
+    return ref.copy_runs_ref(pool, src_starts, dst_starts, run)
+
+
 gather_blocks = jax.jit(gather_blocks_impl, static_argnames=("impl",))
 scatter_blocks = jax.jit(scatter_blocks_impl, static_argnames=("impl",), donate_argnums=(0,))
 copy_blocks = jax.jit(copy_blocks_impl, static_argnames=("impl",), donate_argnums=(0,))
+copy_runs = jax.jit(copy_runs_impl, static_argnames=("run", "impl"), donate_argnums=(0,))
 
 
 # -- paged decode attention ----------------------------------------------------

@@ -25,6 +25,16 @@ def copy_blocks_ref(pool: jax.Array, src_idx: jax.Array, dst_idx: jax.Array) -> 
     return pool.at[dst_idx].set(pool[src_idx])
 
 
+def copy_runs_ref(
+    pool: jax.Array, src_starts: jax.Array, dst_starts: jax.Array, run: int
+) -> jax.Array:
+    """Contiguous-run copy oracle (starts must be ``run``-aligned)."""
+    s = pool.shape[0]
+    grouped = pool.reshape((s // run, run) + pool.shape[1:])
+    grouped = grouped.at[dst_starts // run].set(grouped[src_starts // run])
+    return grouped.reshape(pool.shape)
+
+
 # -- paged decode attention ---------------------------------------------------
 
 

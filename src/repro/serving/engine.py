@@ -41,6 +41,18 @@ class PagedConfig:
     n_regions: int = 2
     slots_per_region: int = 256
     leap: LeapConfig = dataclasses.field(default_factory=LeapConfig)
+    # Two-tier KV pool: G small pages per huge block (1 = small only).  With
+    # G > 1 logical page ids are handed to sequences in aligned groups of G,
+    # so a long sequence's KV naturally forms promotable runs; decode
+    # auto-promotes every complete group behind the append frontier.
+    huge_factor: int = 1
+    auto_promote: bool = True
+    # Eager mode also promotes the group holding the append frontier once all
+    # its ids belong to the sequence: coalesces sooner, at the price of decode
+    # appends dirtying an in-flight huge block — which is exactly what the
+    # driver's §4.2 demotion rule is for (promote eagerly, demote under
+    # pressure).  Off by default: promoted KV stays cold by construction.
+    promote_eager: bool = False
 
 
 @dataclasses.dataclass
@@ -50,6 +62,7 @@ class Sequence:
     length: int
     block_ids: list[int]  # logical leap block ids, in order
     tokens: list[int]
+    promoted: set = dataclasses.field(default_factory=set)  # huge group ids
 
 
 def _kv_write(state, block_ids, offsets, k_new, v_new):
@@ -93,31 +106,88 @@ class PagedEngine:
             cfg.n_kv_heads,
             cfg.head_dim,
         )
+        G = pcfg.huge_factor
         self.pool_cfg = PoolConfig(
-            pcfg.n_regions, pcfg.slots_per_region, payload, cfg.dtype()
+            pcfg.n_regions, pcfg.slots_per_region, payload, cfg.dtype(), huge_factor=G
         )
         # Pages occupy half the physical slots; the other half is the pooled
         # migration headroom (the paper's "migration into pooled memory"
-        # requires pre-faulted destination capacity).
-        pages_per_region = pcfg.slots_per_region // 2
+        # requires pre-faulted destination capacity).  With a huge tier, the
+        # per-region page count rounds down to whole groups so no aligned
+        # logical group straddles a region.
+        pages_per_region = (pcfg.slots_per_region // 2 // G) * G
         n_blocks = pcfg.n_regions * pages_per_region
         placement = np.repeat(np.arange(pcfg.n_regions), pages_per_region)
         state = init_state(self.pool_cfg, n_blocks, placement.astype(np.int32))
         self.driver = MigrationDriver(state, self.pool_cfg, pcfg.leap)
-        self._free_blocks: list[list[int]] = [
-            list(range(r * pages_per_region, (r + 1) * pages_per_region))
-            for r in range(pcfg.n_regions)
-        ]
+        if G > 1:
+            n_groups = n_blocks // G
+            groups_per_region = pages_per_region // G
+            # Group-aligned logical id pool: a sequence draws whole groups of
+            # G ids at a time, spending them block by block, so its KV forms
+            # promotable aligned runs as it grows.
+            self._group_free: list[list[int]] = [
+                list(range(g * G, (g + 1) * G)) for g in range(n_groups)
+            ]
+            self._free_groups: list[list[int]] = [
+                list(range(r * groups_per_region, (r + 1) * groups_per_region))
+                for r in range(pcfg.n_regions)
+            ]
+            self._partial: set[int] = set()  # groups with some (not all) ids free
+            self._seq_spare: dict[int, list[int]] = {}  # sid -> reserved unused ids
+        else:
+            self._free_blocks: list[list[int]] = [
+                list(range(r * pages_per_region, (r + 1) * pages_per_region))
+                for r in range(pcfg.n_regions)
+            ]
         self.seqs: dict[int, Sequence] = {}
         self._next_sid = 0
 
     # -- admission ---------------------------------------------------------------
 
-    def _alloc_block(self, region: int) -> int:
+    def _alloc_block(self, region: int, sid: int | None = None) -> int:
+        if self.pcfg.huge_factor == 1:
+            for r in [region] + [x for x in range(self.pcfg.n_regions) if x != region]:
+                if self._free_blocks[r]:
+                    return self._free_blocks[r].pop()
+            raise RuntimeError("KV pool exhausted")
+        # Tiered pool: spend the sequence's reserved group first, then break a
+        # fresh aligned group, then scavenge loose ids from partial groups.
+        spare = self._seq_spare.get(sid)
+        if spare:
+            return spare.pop(0)
         for r in [region] + [x for x in range(self.pcfg.n_regions) if x != region]:
-            if self._free_blocks[r]:
-                return self._free_blocks[r].pop()
+            if self._free_groups[r]:
+                g = self._free_groups[r].pop()
+                ids = sorted(self._group_free[g])
+                self._group_free[g] = []
+                if sid is not None:
+                    self._seq_spare.setdefault(sid, []).extend(ids[1:])
+                else:
+                    self._partial.add(g)
+                    self._group_free[g] = ids[1:]
+                return ids[0]
+        for g in sorted(self._partial):
+            ids = self._group_free[g]
+            if ids:
+                b = ids.pop()
+                if not ids:
+                    self._partial.discard(g)
+                return b
         raise RuntimeError("KV pool exhausted")
+
+    def _return_block(self, b: int) -> None:
+        """Release one logical id back to the group-aligned pool."""
+        G = self.pcfg.huge_factor
+        g = b // G
+        ids = self._group_free[g]
+        ids.append(b)
+        if len(ids) == G:
+            self._partial.discard(g)
+            region = int(self.driver._table[g * G, REGION])
+            self._free_groups[region].append(g)
+        else:
+            self._partial.add(g)
 
     def admit(self, prompt: np.ndarray, region: int = 0) -> int:
         """Prefill a prompt, install its pages, and emit the first generated
@@ -138,7 +208,7 @@ class PagedEngine:
         seq = Sequence(sid, region, s, [], list(map(int, prompt)) + [first_tok])
         n_blocks = (s + blk - 1) // blk
         for j in range(n_blocks):
-            b = self._alloc_block(region)
+            b = self._alloc_block(region, sid)
             seq.block_ids.append(b)
             lo, hi = j * blk, min((j + 1) * blk, s)
             page = jnp.zeros(self.pool_cfg.block_shape, cfg.dtype())
@@ -150,9 +220,13 @@ class PagedEngine:
 
     def release(self, sid: int) -> None:
         seq = self.seqs.pop(sid)
-        table = self.driver._table
-        for b in seq.block_ids:
-            self._free_blocks[int(table[b, REGION])].append(b)
+        if self.pcfg.huge_factor == 1:
+            table = self.driver._table
+            for b in seq.block_ids:
+                self._free_blocks[int(table[b, REGION])].append(b)
+            return
+        for b in seq.block_ids + self._seq_spare.pop(sid, []):
+            self._return_block(b)
 
     # -- decode -------------------------------------------------------------------
 
@@ -173,7 +247,8 @@ class PagedEngine:
         for sid in sids:
             seq = self.seqs[sid]
             if seq.length % blk == 0 and seq.length // blk >= len(seq.block_ids):
-                seq.block_ids.append(self._alloc_block(seq.region))
+                seq.block_ids.append(self._alloc_block(seq.region, sid))
+            self._maybe_promote(seq)
         tables, lens = self._tables(sids)
         toks = jnp.asarray([[self.seqs[s].tokens[-1]] for s in sids], jnp.int32)
         logits, self.driver.state = _paged_step(
@@ -185,6 +260,33 @@ class PagedEngine:
             seq.tokens.append(int(out[i]))
             seq.length += 1
         return [int(t) for t in out]
+
+    # -- tier promotion -----------------------------------------------------------
+
+    def _maybe_promote(self, seq: Sequence) -> None:
+        """Promote the sequence's complete aligned groups to huge blocks.
+
+        A group is promotable once every member belongs to this sequence and
+        sits strictly behind the append frontier (decode only ever writes the
+        last block, so promoted KV is cold by construction); the driver
+        re-checks residency/coldness and allocates the contiguous run.
+        """
+        G = self.pcfg.huge_factor
+        if G == 1 or not self.pcfg.auto_promote:
+            return
+        pool = seq.block_ids if self.pcfg.promote_eager else seq.block_ids[:-1]
+        if len(pool) < G:
+            return
+        ids = np.asarray(pool, np.int64)
+        groups, counts = np.unique(ids // G, return_counts=True)
+        for g, c in zip(groups, counts):
+            g = int(g)
+            if c != G or g in seq.promoted:
+                continue
+            if self.driver.tiers.tier[g] or self.driver.promote_group(g):
+                # already huge (e.g. a group recycled from a released
+                # sequence) or promoted now — either way, stop retrying it
+                seq.promoted.add(g)
 
     # -- migration ------------------------------------------------------------------
 

@@ -1,0 +1,165 @@
+"""Buddy allocator unit tests: split/coalesce, alignment invariants,
+exhaustion, double-free rejection, tier bookkeeping, FreeList compat."""
+
+import numpy as np
+import pytest
+
+from repro.pool import BuddyAllocator, TwoLevelTable
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError):
+        BuddyAllocator(32, 3)  # not a power of two
+    with pytest.raises(ValueError):
+        BuddyAllocator(30, 8)  # n_slots not divisible by huge
+
+
+def test_alloc_splits_down_and_free_coalesces_up():
+    b = BuddyAllocator(16, 8)
+    s = b.alloc(0)
+    assert s == 0
+    # one small alloc fragments exactly one huge block: frees 1+2+4 remain
+    assert len(b) == 15
+    assert b.check()
+    b.free(s, 0)
+    assert len(b) == 16
+    # fully coalesced again: both huge runs allocatable
+    assert b.take_run() == 0 and b.take_run() == 8 and b.take_run() is None
+    assert b.check()
+
+
+def test_alignment_invariant_all_orders():
+    b = BuddyAllocator(32, 8)
+    starts = [b.alloc(o) for o in (0, 1, 2, 3, 0, 1)]
+    for start, o in zip(starts, (0, 1, 2, 3, 0, 1)):
+        assert start % (1 << o) == 0, (start, o)
+    assert b.check()
+
+
+def test_exhaustion_returns_none_without_mutation():
+    b = BuddyAllocator(8, 8)
+    assert b.take_run() == 0
+    assert b.take_run() is None
+    assert b.take(1) is None and len(b) == 0
+    b.free_run(0)
+    got = b.take(8)
+    assert sorted(got.tolist()) == list(range(8))
+    assert b.take(1) is None
+    b.put(got)
+    assert len(b) == 8 and b.check()
+
+
+def test_double_free_rejected():
+    b = BuddyAllocator(16, 8)
+    s = b.alloc(0)
+    b.free(s, 0)
+    with pytest.raises(ValueError):
+        b.free(s, 0)
+    run = b.take_run()
+    b.free_run(run)
+    with pytest.raises(ValueError):
+        b.free_run(run)
+    with pytest.raises(ValueError):
+        b.free(5, 0)  # never allocated
+    assert b.check()
+
+
+def test_wrong_order_free_rejected():
+    b = BuddyAllocator(16, 8)
+    run = b.take_run()
+    with pytest.raises(ValueError):
+        b.free(run, 0)  # it is a huge allocation, not a small one
+    b.free_run(run)
+    assert b.check()
+
+
+def test_fragmentation_blocks_runs_but_not_smalls():
+    b = BuddyAllocator(16, 8)
+    smalls = b.take(16)
+    # free every other slot: 8 free slots but no contiguous aligned run
+    b.put(smalls[::2])
+    assert len(b) == 8
+    assert b.take_run() is None
+    assert b.take(8) is not None
+    assert b.check()
+
+
+def test_split_and_merge_allocated_roundtrip():
+    b = BuddyAllocator(16, 8)
+    run = b.take_run()
+    b.split_allocated(run)  # demotion: G live smalls, bytes unmoved
+    assert b.check()
+    for i in range(3):
+        b.free(run + i, 0)  # some members migrate away individually
+    assert len(b) == 8 + 3  # the untouched second run + the freed members
+    with pytest.raises(ValueError):
+        b.merge_allocated(run)  # not fully live small anymore
+    b.reserve(range(run, run + 3))
+    b.merge_allocated(run)  # adoption: back to one live huge block
+    b.free_run(run)
+    assert len(b) == 16 and b.check()
+    with pytest.raises(ValueError):
+        b.split_allocated(run)  # nothing live there
+
+
+def test_merge_allocated_requires_alignment():
+    b = BuddyAllocator(16, 8)
+    b.reserve(range(4, 12))  # contiguous but crossing the buddy boundary
+    with pytest.raises(ValueError):
+        b.merge_allocated(4)
+    assert b.check()
+
+
+def test_reserve_carves_exact_slots():
+    b = BuddyAllocator(16, 4)
+    b.reserve([0, 5, 6, 11])
+    assert len(b) == 12
+    assert sorted(set(range(16)) - set(b)) == [0, 5, 6, 11]
+    with pytest.raises(ValueError):
+        b.reserve([5])  # already live
+    assert b.check()
+
+
+def test_freelist_compat_shims():
+    b = BuddyAllocator(8, 4)
+    assert len(b) == 8
+    s = b.popleft()
+    assert s == 0  # lowest-address fit
+    b.append(s)
+    b.extend([])
+    got = b.take(3)
+    assert got is not None and len(b) == 5
+    b.put(got)
+    assert sorted(b) == list(range(8))
+    bb = BuddyAllocator(4, 4)
+    bb.reserve(range(4))
+    with pytest.raises(IndexError):
+        bb.popleft()
+
+
+def test_two_level_table_invariants():
+    t = TwoLevelTable(16, 4)
+    assert t.n_groups == 4
+    assert t.members(1).tolist() == [4, 5, 6, 7]
+    assert not t.is_huge([0, 5, 9]).any()
+    t.promote(1, region=0, start=8)
+    assert t.is_huge([3, 4, 7, 8]).tolist() == [False, True, True, False]
+    assert t.huge_groups().tolist() == [1]
+    with pytest.raises(ValueError):
+        t.promote(1, 0, 8)  # already huge
+    with pytest.raises(ValueError):
+        t.promote(2, 0, 9)  # misaligned start
+    flat = np.zeros((16, 2), np.int32)
+    flat[:, 1] = np.arange(16)
+    flat[t.members(1), 1] = 8 + np.arange(4)
+    assert t.check_consistent(flat)
+    flat[5, 1] = 0  # member off its run
+    with pytest.raises(AssertionError):
+        t.check_consistent(flat)
+    t.relocate(1, region=1, start=4)
+    assert t.huge_loc[1].tolist() == [1, 4]
+    t.demote(1)
+    with pytest.raises(ValueError):
+        t.demote(1)
+    with pytest.raises(ValueError):
+        t.relocate(1, 0, 0)

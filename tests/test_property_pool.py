@@ -1,0 +1,132 @@
+"""Hypothesis property tests for the two-tier pool: random alloc/free/
+promote/demote/migrate interleavings never corrupt the buddy free lists or
+the two-level table, and every logical block stays readable (with the right
+bytes) across promotion/demotion during active migration.
+
+Kept importorskip-guarded like the other property suites so tier-1 collects
+without the optional ``hypothesis`` dev dependency.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import LeapConfig, MigrationDriver, PoolConfig, init_state, leap_write
+from repro.pool import BuddyAllocator
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_ops=st.integers(10, 80),
+    huge=st.sampled_from([2, 4, 8]),
+)
+def test_property_buddy_random_ops_keep_invariants(seed, n_ops, huge):
+    """Random alloc/free/split/merge traffic: the free list stays coherent
+    (alignment, exact partition, full coalescing) and misuse always raises."""
+    rng = np.random.default_rng(seed)
+    n_slots = huge * int(rng.integers(2, 9))
+    b = BuddyAllocator(n_slots, huge)
+    live_small: list[int] = []
+    live_huge: list[int] = []
+    for _ in range(n_ops):
+        op = rng.integers(0, 6)
+        if op == 0:  # small alloc
+            s = b.alloc(0)
+            if s is not None:
+                live_small.append(s)
+        elif op == 1 and live_small:  # small free
+            b.free(live_small.pop(int(rng.integers(len(live_small)))), 0)
+        elif op == 2:  # huge alloc
+            s = b.take_run()
+            if s is not None:
+                live_huge.append(s)
+        elif op == 3 and live_huge:  # huge free
+            b.free_run(live_huge.pop(int(rng.integers(len(live_huge)))))
+        elif op == 4 and live_huge:  # demote
+            s = live_huge.pop(int(rng.integers(len(live_huge))))
+            b.split_allocated(s)
+            live_small.extend(range(s, s + huge))
+        elif op == 5:  # merge an aligned fully-live run if one exists
+            starts = {s for s in live_small if s % huge == 0}
+            runs = [
+                s for s in starts
+                if all(s + i in live_small for i in range(huge))
+            ]
+            if runs:
+                s = runs[0]
+                b.merge_allocated(s)
+                live_small = [x for x in live_small if not s <= x < s + huge]
+                live_huge.append(s)
+        b.check()
+    assert len(b) == n_slots - len(live_small) - huge * len(live_huge)
+    # double frees always rejected, whatever the history
+    if live_small:
+        b.free(live_small[0], 0)
+        with pytest.raises(ValueError):
+            b.free(live_small[0], 0)
+    b.check()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    writes_per_tick=st.integers(0, 4),
+    huge=st.sampled_from([2, 4]),
+    demote_after=st.integers(1, 3),
+)
+def test_property_tiered_interleavings_preserve_contents(
+    seed, writes_per_tick, huge, demote_after
+):
+    """Random migrate/promote/write/tick interleavings on a tiered pool:
+    every block stays readable with exact contents, tier metadata stays
+    consistent with the flat table, and the allocators never corrupt."""
+    rng = np.random.default_rng(seed)
+    n_groups, n_regions = 4, 2
+    n_blocks = n_groups * huge
+    cfg = PoolConfig(n_regions, n_blocks * 2, (4,), huge_factor=huge)
+    state = init_state(cfg, n_blocks, np.zeros(n_blocks, np.int32))
+    data = rng.normal(size=(n_blocks, 4)).astype(np.float32)
+    state = leap_write(state, jnp.arange(n_blocks), jnp.asarray(data))
+    drv = MigrationDriver(
+        state,
+        cfg,
+        LeapConfig(
+            initial_area_blocks=huge,
+            budget_blocks_per_tick=huge,
+            demote_after_attempts=demote_after,
+            max_attempts_before_force=demote_after + 3,
+        ),
+    )
+    drv.adopt_huge(rng.choice(n_groups, size=2, replace=False))
+    expected = data.copy()
+    for _ in range(40):
+        op = rng.integers(0, 4)
+        if op == 0:  # request migration of a random span
+            ids = rng.choice(n_blocks, size=int(rng.integers(1, n_blocks)), replace=False)
+            drv.request(ids, int(rng.integers(0, n_regions)))
+        elif op == 1:  # try promoting a random group
+            drv.promote_group(int(rng.integers(0, n_groups)))
+        elif op == 2 and writes_per_tick:
+            ids = rng.choice(n_blocks, size=writes_per_tick, replace=False)
+            vals = rng.normal(size=(writes_per_tick, 4)).astype(np.float32)
+            drv.write(jnp.asarray(ids.astype(np.int32)), jnp.asarray(vals))
+            expected[ids] = vals
+        else:
+            drv.tick()
+        # invariants hold mid-migration, across promotions and demotions
+        assert drv.verify_tiers()
+        np.testing.assert_array_equal(
+            np.asarray(drv.read(jnp.arange(n_blocks))), expected
+        )
+    assert drv.drain()
+    assert drv.verify_mirror() and drv.verify_tiers()
+    np.testing.assert_array_equal(
+        np.asarray(drv.read(jnp.arange(n_blocks))), expected
+    )
+    # slot conservation: live allocations exactly cover the logical blocks
+    used = sum(cfg.slots_per_region - len(f) for f in drv._free)
+    assert used == n_blocks
