@@ -147,6 +147,7 @@ def warmup_paths(n_blocks: int, block_kb: int, per_ticks=(1,)):
     for pt in per_ticks:
         if pt:
             WriteBurst(drv, n_blocks, pt).fire()
-    drv.request(_np.arange(n_blocks // 2), 1)
-    drv.drain()
+    sess = drv.default_session()
+    sess.leap(_np.arange(n_blocks // 2), 1)
+    sess.drain()
     jax.block_until_ready(drv.state.pool)

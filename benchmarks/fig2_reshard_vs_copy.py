@@ -52,7 +52,7 @@ def run(n_blocks=256, block_kb=256):
         cfg2, drv2, _ = make_pool(n_blocks, block_kb)
         rs = SyncResharder(cfg2, fresh_alloc=True)
         t0 = time.perf_counter()
-        state, res = rs.migrate(drv2.state, drv2._table, drv2._free, np.arange(n_blocks), 1)
+        rs.migrate_driver(drv2, np.arange(n_blocks), 1)
         ts.append(time.perf_counter() - t0)
     t_mp = float(np.median(ts))
     emit(

@@ -39,8 +39,8 @@ def run(n_blocks=512, block_kb=64):
         for rep in range(3):
             _, d, _ = make_pool(n_blocks, block_kb, leap=lc, seed=rep)
             t0 = time.perf_counter()
-            d.request(np.arange(n_blocks), 1)
-            assert d.drain()
+            s = d.default_session()
+            assert s.leap(np.arange(n_blocks), 1).wait()
             ts.append(time.perf_counter() - t0)
         t = float(np.median(ts))
         out[area_kb] = t
@@ -55,7 +55,7 @@ def run(n_blocks=512, block_kb=64):
         cfg2, d2, _ = make_pool(n_blocks, block_kb, seed=rep)
         rs = SyncResharder(cfg2, fresh_alloc=True)
         t0 = time.perf_counter()
-        rs.migrate(d2.state, d2._table, d2._free, np.arange(n_blocks), 1)
+        rs.migrate_driver(d2, np.arange(n_blocks), 1)
         ts.append(time.perf_counter() - t0)
     t_mp = float(np.median(ts))
     emit(f"fig4/move_pages_{total_mb:.0f}MB", t_mp * 1e6, f"x{t_mp / t_opt:.2f}")

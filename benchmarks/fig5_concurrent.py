@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import WriteBurst, emit, make_pool
+from repro.api import LeapSession
 from repro.core import AutoBalanceConfig, AutoBalancer, LeapConfig, SyncResharder
 
 CASES = [  # (label, writes/tick, skew)
@@ -46,25 +47,29 @@ def _leap(n_blocks, block_kb, per_tick, skew, area_blocks, label, huge_factor=1)
     _, drv, _ = make_pool(
         n_blocks, block_kb, leap=lc, huge_factor=huge_factor, adopt=huge_factor > 1
     )
+    sess = LeapSession(drv)
     burst = WriteBurst(drv, n_blocks, per_tick, skew)
-    drv.request(np.arange(n_blocks), 1)
+    handle = sess.leap(np.arange(n_blocks), 1)
     t0 = time.perf_counter()
     ticks = 0
-    while not drv.done and ticks < 5000:
-        drv.tick()
+    while not handle.done and ticks < 5000:
+        sess.tick()
         burst.fire()
         ticks += 1
-    ok = drv.drain(10_000)
+    ok = handle.wait(10_000)
     jax.block_until_ready(drv.state.pool)
     dt = time.perf_counter() - t0
-    migrated = int((drv.host_placement() == 1).sum())
+    p = handle.progress()
+    assert p.committed + p.forced + p.cancelled == p.requested, p
+    stats = sess.facade.snapshot_stats()
+    migrated = int((sess.facade.placement() == 1).sum())
     thr = burst.done / dt if dt > 0 else 0
     return dict(
-        time=dt, thr=thr, migrated=migrated, retries=drv.stats.dirty_rejections,
-        forced=drv.stats.blocks_forced,
-        extra_mb=drv.stats.extra_bytes(drv.pool_cfg.block_bytes) / 2**20, ok=ok,
-        demotions=drv.stats.demotions,
-        huge_committed=drv.stats.huge_areas_committed,
+        time=dt, thr=thr, migrated=migrated, retries=stats.dirty_rejections,
+        forced=p.forced,
+        extra_mb=stats.extra_bytes(drv.pool_cfg.block_bytes) / 2**20, ok=ok,
+        demotions=stats.demotions,
+        huge_committed=stats.huge_areas_committed,
     )
 
 
@@ -75,8 +80,7 @@ def _move_pages(n_blocks, block_kb, per_tick, skew):
     t0 = time.perf_counter()
     # writes land before and after, but the call itself blocks them entirely
     burst.fire()
-    state, res = rs.migrate(drv.state, drv._table, drv._free, np.arange(n_blocks), 1)
-    drv.state = state
+    res = rs.migrate_driver(drv, np.arange(n_blocks), 1)
     burst.fire()
     dt = time.perf_counter() - t0
     return dict(time=dt, thr=burst.done / dt, migrated=len(res.migrated),
@@ -90,16 +94,16 @@ def _autobalance(n_blocks, block_kb, per_tick, skew, ticks=400):
     t0 = time.perf_counter()
     done_at = None
     for tick in range(ticks):
-        ab.observe_reads(np.arange(0, n_blocks, 4), 1, drv._table)  # reader hints
+        ab.observe_driver(drv, np.arange(0, n_blocks, 4), 1)  # reader hints
         burst.fire()
         ab.observe_writes(burst.per_tick)
-        drv.state, _ = ab.scan(drv.state, drv._table, drv._free)
-        if done_at is None and (drv._table[:, 0] == 1).all():
+        ab.scan_driver(drv)
+        if done_at is None and (drv.host_placement() == 1).all():
             done_at = time.perf_counter() - t0
             break
     jax.block_until_ready(drv.state.pool)
     dt = time.perf_counter() - t0
-    migrated = int((drv._table[:, 0] == 1).sum())
+    migrated = int((drv.host_placement() == 1).sum())
     return dict(time=done_at or dt, thr=burst.done / dt, migrated=migrated)
 
 

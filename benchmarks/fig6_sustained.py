@@ -12,6 +12,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import WriteBurst, emit, make_pool
+from repro.api import LeapSession
 from repro.core import AutoBalanceConfig, AutoBalancer, LeapConfig, SyncResharder
 
 TICKS = 120
@@ -24,13 +25,14 @@ def run(n_blocks=256, block_kb=64, _warmed=[]):
                                 leap=LeapConfig(initial_area_blocks=64, chunk_blocks=32,
                                                 budget_blocks_per_tick=64,
                                                 max_attempts_before_force=6))
+            s = LeapSession(d)
             b = WriteBurst(d, n_blocks, pt)
-            d.request(np.arange(n_blocks), 1)
+            s.leap(np.arange(n_blocks), 1)
             for _ in range(3):
-                d.tick(); b.fire()
-            d.drain()
+                s.tick(); b.fire()
+            s.drain()
             cfgx, dx, _ = make_pool(n_blocks, block_kb)
-            SyncResharder(cfgx, fresh_alloc=True).migrate(dx.state, dx._table, dx._free, np.arange(n_blocks), 1)
+            SyncResharder(cfgx, fresh_alloc=True).migrate_driver(dx, np.arange(n_blocks), 1)
         _warmed.append(True)
     for per_tick in (2, 8, 32, 128):
         base_thr = None
@@ -47,12 +49,13 @@ def run(n_blocks=256, block_kb=64, _warmed=[]):
         lc = LeapConfig(initial_area_blocks=64, chunk_blocks=32,
                         budget_blocks_per_tick=64, max_attempts_before_force=6)
         _, d1, _ = make_pool(n_blocks, block_kb, leap=lc)
+        s1 = LeapSession(d1)
         b1 = WriteBurst(d1, n_blocks, per_tick)
-        d1.request(np.arange(n_blocks), 1)
+        h1 = s1.leap(np.arange(n_blocks), 1)
         t0 = time.perf_counter()
         for _ in range(TICKS):
-            if not d1.done:
-                d1.tick()
+            if not h1.done:
+                s1.tick()
             b1.fire()
         jax.block_until_ready(d1.state.pool)
         thr1 = b1.done / (time.perf_counter() - t0)
@@ -67,8 +70,7 @@ def run(n_blocks=256, block_kb=64, _warmed=[]):
         b2 = WriteBurst(d2, n_blocks, per_tick)
         rs = SyncResharder(cfg, fresh_alloc=True)
         t0 = time.perf_counter()
-        state, res = rs.migrate(d2.state, d2._table, d2._free, np.arange(n_blocks), 1)
-        d2.state = state
+        rs.migrate_driver(d2, np.arange(n_blocks), 1)
         for _ in range(TICKS):
             b2.fire()
         jax.block_until_ready(d2.state.pool)
@@ -76,7 +78,7 @@ def run(n_blocks=256, block_kb=64, _warmed=[]):
         emit(
             f"fig6/move_pages_rate{per_tick}",
             1e6 * TICKS / max(thr2, 1),
-            f"thr={100 * thr2 / base_thr:.0f}%;migrated={100 * (d2._table[:, 0] == 1).mean():.0f}%",
+            f"thr={100 * thr2 / base_thr:.0f}%;migrated={100 * (d2.host_placement() == 1).mean():.0f}%",
         )
 
         # auto balancing
@@ -85,16 +87,16 @@ def run(n_blocks=256, block_kb=64, _warmed=[]):
         ab = AutoBalancer(cfg, n_blocks, AutoBalanceConfig(scan_budget_blocks=64))
         t0 = time.perf_counter()
         for _ in range(TICKS):
-            ab.observe_reads(np.arange(0, n_blocks, 4), 1, d3._table)
+            ab.observe_driver(d3, np.arange(0, n_blocks, 4), 1)
             b3.fire()
             ab.observe_writes(per_tick)
-            d3.state, _ = ab.scan(d3.state, d3._table, d3._free)
+            ab.scan_driver(d3)
         jax.block_until_ready(d3.state.pool)
         thr3 = b3.done / (time.perf_counter() - t0)
         emit(
             f"fig6/auto_balance_rate{per_tick}",
             1e6 * TICKS / max(thr3, 1),
-            f"thr={100 * thr3 / base_thr:.0f}%;migrated={100 * (d3._table[:, 0] == 1).mean():.0f}%",
+            f"thr={100 * thr3 / base_thr:.0f}%;migrated={100 * (d3.host_placement() == 1).mean():.0f}%",
         )
     return True
 

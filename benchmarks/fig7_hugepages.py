@@ -32,9 +32,10 @@ def _drain_throughput(n_blocks, block_kb, huge_factor):
     _, drv, _ = make_pool(
         n_blocks, block_kb, leap=lc, huge_factor=huge_factor, adopt=huge_factor > 1
     )
-    drv.request(np.arange(n_blocks), 1)
+    sess = drv.default_session()
+    h = sess.leap(np.arange(n_blocks), 1)
     t0 = time.perf_counter()
-    ok = drv.drain()
+    ok = h.wait()
     jax.block_until_ready(drv.state.pool)
     dt = time.perf_counter() - t0
     assert ok and drv.verify_mirror() and drv.verify_tiers()
@@ -79,18 +80,19 @@ def run_demotion(n_blocks=256, block_kb=64, huge_factor=8, per_tick=8):
     hot = np.arange(2 * huge_factor)
     rng = np.random.default_rng(7)
     vals_shape = (per_tick,) + drv.pool_cfg.block_shape
-    drv.request(np.arange(n_blocks), 1)
+    sess = drv.default_session()
+    h = sess.leap(np.arange(n_blocks), 1)
     t0 = time.perf_counter()
     ticks = 0
-    while not drv.done and ticks < 5000:
-        drv.tick()
+    while not h.done and ticks < 5000:
+        sess.tick()
         ids = rng.choice(hot, size=per_tick, replace=False)
         drv.write(
             jax.numpy.asarray(ids.astype(np.int32)),
             jax.numpy.asarray(rng.standard_normal(vals_shape, dtype=np.float32)),
         )
         ticks += 1
-    ok = drv.drain(10_000)
+    ok = h.wait(10_000)
     jax.block_until_ready(drv.state.pool)
     dt = time.perf_counter() - t0
     migrated = int((drv.host_placement() == 1).sum())
@@ -114,8 +116,9 @@ def run_promotion(n_blocks=128, block_kb=64, huge_factor=8):
     rng = np.random.default_rng(3)
     for _ in range(4):  # churn placements so member slots scatter
         ids = rng.choice(n_blocks, size=n_blocks // 2, replace=False)
-        drv.request(ids, int(rng.integers(0, 2)))
-        drv.drain()
+        sess = drv.default_session()
+        sess.leap(ids, int(rng.integers(0, 2)))
+        sess.drain()
     t0 = time.perf_counter()
     promoted = sum(drv.promote_group(g) for g in drv.promote_candidates())
     jax.block_until_ready(drv.state.pool)

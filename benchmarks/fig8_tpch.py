@@ -67,25 +67,23 @@ def run():
             t_mig = 0.0
             if method == "leap":
                 t0 = time.perf_counter()
-                store.steal(np.arange(store.n_morsels), 1)
+                handle = store.leap(np.arange(store.n_morsels), 1)
                 # asynchronous: migration ticks interleave with query work;
                 # drain the remainder (paper reports full-completion time)
-                while not store.driver.done:
+                while not handle.done:
                     store.tick()
                     if rng is not None:
                         store.write_random_fields(rng, 16, tpch.ORDERKEY, -1.0)
-                store.drain()
+                assert handle.wait()
+                p = handle.progress()
+                assert p.committed + p.forced + p.cancelled == p.requested, p
                 t_mig = time.perf_counter() - t0
             elif method == "move_pages":
                 rs = SyncResharder(store.driver.pool_cfg, fresh_alloc=True)
                 t0 = time.perf_counter()
                 if rng is not None:
                     store.write_random_fields(rng, 16, tpch.ORDERKEY, -1.0)
-                state, res = rs.migrate(
-                    store.driver.state, store.driver._table, store.driver._free,
-                    np.arange(store.n_morsels), 1,
-                )
-                store.driver.state = state
+                rs.migrate_driver(store.driver, np.arange(store.n_morsels), 1)
                 t_mig = time.perf_counter() - t0
             elif method == "auto":
                 # auto NUMA balancing never sees an explicit request; morsels

@@ -33,15 +33,16 @@ def _drain(n_blocks, block_kb, fused, per_tick, seed=0):
         fused_dispatch=fused,
     )
     _, drv, _ = make_pool(n_blocks, block_kb, leap=lc, seed=seed)
+    sess = drv.default_session()
     burst = WriteBurst(drv, n_blocks, per_tick)
-    drv.request(np.arange(n_blocks), 1)
+    h = sess.leap(np.arange(n_blocks), 1)
     t0 = time.perf_counter()
     ticks = 0
-    while not drv.done and ticks < 20_000:
-        drv.tick()
+    while not h.done and ticks < 20_000:
+        sess.tick()
         burst.fire()
         ticks += 1
-    ok = drv.drain()
+    ok = h.wait()
     jax.block_until_ready(drv.state.pool)
     dt = time.perf_counter() - t0
     assert ok and drv.verify_mirror()

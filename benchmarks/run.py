@@ -1,11 +1,20 @@
 """Benchmark harness — one module per paper table/figure (+ beyond-paper).
 
-Prints ``name,us_per_call,derived`` CSV.  Run:
+Prints ``name,us_per_call,derived`` CSV and persists each suite's rows as
+machine-readable ``BENCH_<suite>.json`` next to the CSV stdout (so the perf
+trajectory survives the run).  Run:
+
     PYTHONPATH=src python -m benchmarks.run [--only fig4_granularity,...]
+    PYTHONPATH=src python -m benchmarks.run --only fig5_concurrent.run_huge
+
+``--only`` accepts module names (every entry of that module) and/or specific
+``module.function`` entries, comma-separated.
 """
 
 import argparse
 import importlib
+import json
+import os
 import sys
 import time
 import traceback
@@ -25,18 +34,68 @@ SUITES = [
 ]
 
 
-def main() -> int:
+def suite_key(mod_name: str, fn_name: str) -> str:
+    """Stable identifier for one SUITES entry: ``mod`` or ``mod.fn``."""
+    return mod_name if fn_name == "run" else f"{mod_name}.{fn_name}"
+
+
+def _selected(only: set | None, mod_name: str, fn_name: str) -> bool:
+    if only is None:
+        return True
+    return mod_name in only or suite_key(mod_name, fn_name) in only
+
+
+def _write_json(outdir: str, key: str, rows, elapsed_s: float, ok: bool) -> str:
+    os.makedirs(outdir, exist_ok=True)
+    path = os.path.join(outdir, f"BENCH_{key}.json")
+    with open(path, "w") as f:
+        json.dump(
+            {"suite": key, "ok": ok, "elapsed_s": elapsed_s, "rows": rows},
+            f,
+            indent=2,
+        )
+        f.write("\n")
+    return path
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", type=str, default=None)
-    args = ap.parse_args()
+    ap.add_argument(
+        "--only",
+        type=str,
+        default=None,
+        help="comma-separated modules (fig5_concurrent) and/or entries "
+        "(fig5_concurrent.run_huge)",
+    )
+    ap.add_argument(
+        "--outdir",
+        type=str,
+        default=".",
+        help="directory for the BENCH_<suite>.json result files",
+    )
+    args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
+    if only is not None:
+        known = {m for m, f, _ in SUITES} | {suite_key(m, f) for m, f, _ in SUITES}
+        unknown = only - known
+        if unknown:
+            print(f"# unknown --only entries: {sorted(unknown)}", file=sys.stderr)
+            print(f"# known: {sorted(known)}", file=sys.stderr)
+            return 2
+
+    from benchmarks import common
 
     print("name,us_per_call,derived")
     failures = 0
+    ran = 0
     for mod_name, fn_name, kw in SUITES:
-        if only and mod_name not in only:
+        if not _selected(only, mod_name, fn_name):
             continue
+        ran += 1
+        key = suite_key(mod_name, fn_name)
+        start_row = len(common.ROWS)
         t0 = time.time()
+        ok = True
         try:
             mod = importlib.import_module(f"benchmarks.{mod_name}")
             getattr(mod, fn_name)(**kw)
@@ -44,8 +103,16 @@ def main() -> int:
                   file=sys.stderr, flush=True)
         except Exception:
             failures += 1
+            ok = False
             print(f"# {mod_name}.{fn_name} FAILED", file=sys.stderr)
             traceback.print_exc()
+        path = _write_json(
+            args.outdir, key, common.ROWS[start_row:], time.time() - t0, ok
+        )
+        print(f"# wrote {path}", file=sys.stderr, flush=True)
+    if only is not None and ran == 0:
+        print("# --only matched nothing", file=sys.stderr)
+        return 2
     return 1 if failures else 0
 
 

@@ -44,19 +44,24 @@ def run():
         eng = _engine(cfg, params)
         sids = [eng.admit(p, region=0) for p in prompts]
         toks = []
+        handle = None
         t0 = time.perf_counter()
         if migrate == "sync":
-            # stop-the-world: drain a full migration before decoding resumes
-            eng.rebalance(sids[0], 1)
-            eng.drain()
+            # stop-the-world: wait the whole migration out before decoding
+            handle = eng.rebalance(sids[0], 1)
+            assert handle.wait()
         elif migrate == "live":
-            eng.rebalance(sids[0], 1)
+            handle = eng.rebalance(sids[0], 1)
         for _ in range(STEPS):
             if migrate == "live":
                 eng.tick()
             toks.append(tuple(eng.decode(sids)))
         if migrate == "live":
-            assert eng.drain()
+            assert handle.wait()
+        if handle is not None:
+            p = handle.progress()
+            assert p.committed + p.forced + p.cancelled == p.requested, p
+            assert handle.done and p.cancelled == 0
         dt = time.perf_counter() - t0
         return toks, dt
 

@@ -36,13 +36,14 @@ def run(n_blocks=256, block_kb=64, per_tick=8):
             max_attempts_before_force=8,
         )
         _, drv, _ = make_pool(n_blocks, block_kb, leap=lc)
+        sess = drv.default_session()
         burst = WriteBurst(drv, n_blocks, per_tick)
-        drv.request(np.arange(n_blocks), 1)
+        h = sess.leap(np.arange(n_blocks), 1)
         t0 = time.perf_counter()
-        while not drv.done:
-            drv.tick()
+        while not h.done:
+            sess.tick()
             burst.fire()
-        drv.drain()
+        sess.drain()
         jax.block_until_ready(drv.state.pool)
         dt = time.perf_counter() - t0
         extra = drv.stats.extra_bytes(drv.pool_cfg.block_bytes)
@@ -67,13 +68,14 @@ def run(n_blocks=256, block_kb=64, per_tick=8):
         max_attempts_before_force=8,
     )
     _, drv, _ = make_pool(n_blocks, block_kb, leap=lc, huge_factor=G, adopt=True)
+    sess = drv.default_session()
     burst = WriteBurst(drv, n_blocks, per_tick)
-    drv.request(np.arange(n_blocks), 1)
+    h = sess.leap(np.arange(n_blocks), 1)
     t0 = time.perf_counter()
-    while not drv.done:
-        drv.tick()
+    while not h.done:
+        sess.tick()
         burst.fire()
-    drv.drain()
+    sess.drain()
     jax.block_until_ready(drv.state.pool)
     dt = time.perf_counter() - t0
     s = drv.stats

@@ -1,8 +1,8 @@
 """Quickstart: the leap migration engine in 60 lines.
 
 Creates a 2-region pool holding 64 blocks, starts an asynchronous migration
-while a writer keeps mutating blocks, and shows the dirty-retry protocol
-converging with zero lost writes.
+through the handle-based session API while a writer keeps mutating blocks,
+and shows the dirty-retry protocol converging with zero lost writes.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,6 +10,7 @@ converging with zero lost writes.
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import HandleStatus, LeapSession
 from repro.core import LeapConfig, MigrationDriver, PoolConfig, init_state, leap_write
 
 
@@ -31,26 +32,35 @@ def main():
             max_attempts_before_force=4,  # write-through escalation
         ),
     )
+    session = LeapSession(drv)
 
-    print("requesting migration of all 64 blocks: region 0 -> region 1")
-    drv.request(np.arange(64), dst_region=1)
+    print("leaping all 64 blocks: region 0 -> region 1 (async, tracked)")
+    handle = session.leap(
+        np.arange(64),
+        dst_region=1,
+        on_done=lambda h: print(f"  on_done fired: {h.status.name}"),
+    )
 
     step = 0
     expected = data.copy()
-    while not drv.done:
-        drv.tick()  # one asynchronous migration slice
+    while not handle.done:
+        session.tick()  # one asynchronous migration slice
         # ... meanwhile the application keeps writing (concurrent mutations!)
         ids = rng.choice(64, size=2, replace=False)
         vals = rng.standard_normal((2, 1, 1024), dtype=np.float32)
         drv.write(jnp.asarray(ids.astype(np.int32)), jnp.asarray(vals))
         expected[ids] = vals
         step += 1
+    assert handle.wait()  # harvest the final verdicts
 
-    s = drv.stats
-    print(f"done after {step} ticks: migrated={s.blocks_migrated} forced={s.blocks_forced}")
-    print(f"dirty rejections={s.dirty_rejections} splits={s.splits} "
-          f"extra copied={s.extra_bytes(cfg.block_bytes)} bytes")
-    placement = drv.host_placement()
+    p = handle.progress()
+    print(f"done after {step} ticks: committed={p.committed} forced={p.forced}")
+    assert p.committed + p.forced + p.cancelled == p.requested == 64
+    assert handle.status == HandleStatus.COMMITTED
+    stats = session.facade.snapshot_stats()
+    print(f"dirty rejections={stats.dirty_rejections} splits={stats.splits} "
+          f"extra copied={stats.extra_bytes(cfg.block_bytes)} bytes")
+    placement = session.facade.placement()
     assert (placement == 1).all(), "all blocks must be on region 1"
     got = np.asarray(drv.read(jnp.arange(64)))
     assert np.array_equal(got, expected), "no write may be lost"

@@ -35,19 +35,23 @@ def main():
                                         budget_blocks_per_tick=2)),
         )
         sids = [eng.admit(p, region=i % 2) for i, p in enumerate(prompts)]
+        handle = None
         if live_migration:
-            n = eng.rebalance(sids[0], dst_region=1)
-            print(f"rebalancing seq {sids[0]}: {n} KV pages region 0 -> 1, live")
+            handle = eng.rebalance(sids[0], dst_region=1)
+            print(f"rebalancing seq {sids[0]}: {handle.requested} KV pages "
+                  f"region 0 -> 1, live ({handle.status.name})")
         outs = []
         for step in range(16):
             if live_migration:
                 eng.tick()
             outs.append(tuple(eng.decode(sids)))
         if live_migration:
-            assert eng.drain()
-            s = eng.driver.stats
-            print(f"migration: migrated={s.blocks_migrated} forced={s.blocks_forced} "
-                  f"dirty_rejections={s.dirty_rejections}")
+            assert handle.wait()
+            p = handle.progress()
+            assert p.committed + p.forced + p.cancelled == p.requested
+            s = eng.facade.snapshot_stats()
+            print(f"migration: {handle.status.name} committed={p.committed} "
+                  f"forced={p.forced} dirty_rejections={s.dirty_rejections}")
         return outs
 
     base = serve(live_migration=False)

@@ -1,0 +1,126 @@
+"""`LeapSession`: the handle-based public API over a migration driver.
+
+The paper's `page_leap()` contract — *returns control immediately and
+guarantees eventual migration* — needs a caller-visible object per request:
+something to observe (status/progress), to wait on, and to cancel.  The
+session is the factory for those :class:`LeapHandle` futures, the host of
+the sealed read-only :class:`PoolFacade`, and the injection point for
+pluggable :class:`PlacementPolicy` objects (`apply`).
+
+One driver, many possible sessions: handles are backed by the driver's own
+request registry, so every session over the same driver sees a consistent
+world.  ``MigrationDriver.default_session()`` returns a cached one.
+"""
+
+from __future__ import annotations
+
+from repro.api.facade import PoolFacade
+from repro.api.handle import LeapHandle
+from repro.api.policy import MoveLike, PlacementPolicy, as_move
+
+
+class LeapSession:
+    """Handle-based migration API: request futures over one driver."""
+
+    def __init__(self, driver):
+        self.driver = driver
+        self.facade = PoolFacade(driver)
+        self._handles: list[LeapHandle] = []
+
+    # -- requests ----------------------------------------------------------
+
+    def leap(
+        self,
+        block_ids,
+        dst_region: int,
+        priority: int = 0,
+        on_done=None,
+        tag=None,
+    ) -> LeapHandle:
+        """Asynchronously migrate ``block_ids`` to ``dst_region``.
+
+        Returns immediately with a :class:`LeapHandle`.  Blocks already at
+        the destination or already claimed by an earlier live request are
+        deduplicated away — the handle accounts only for blocks it enqueued
+        (``handle.requested``), and a fully-deduplicated request completes
+        instantly.  Higher ``priority`` requests drain strictly first.
+        ``on_done(handle)`` fires when the request resolves.
+        """
+        req = self.driver.submit(block_ids, dst_region, priority=priority)
+        handle = LeapHandle(self.driver, req, tag=tag)
+        if on_done is not None:
+            handle.on_done(on_done)
+        # Track live handles only (callers hold their own references), so a
+        # long-running session does not accumulate one entry per request.
+        self._handles = [h for h in self._handles if not h.done]
+        if not handle.done:
+            self._handles.append(handle)
+        return handle
+
+    def apply(self, policy: PlacementPolicy, priority: int = 0) -> list[LeapHandle]:
+        """Run a placement policy: one tracked request per returned move.
+
+        ``priority`` is the default for moves whose own priority is None
+        (an explicit 0 on a move is honored).
+        """
+        handles = []
+        for m in policy.decide(self.facade):
+            move = as_move(m)
+            handles.append(
+                self.leap(
+                    move.block_ids,
+                    move.dst_region,
+                    priority=priority if move.priority is None else move.priority,
+                    tag=move.tag,
+                )
+            )
+        return handles
+
+    def submit_moves(self, moves: list[MoveLike], priority: int = 0) -> list[LeapHandle]:
+        """Like :meth:`apply` for an explicit move list."""
+        return self.apply(_StaticPolicy(moves), priority=priority)
+
+    # -- driving the migration loop ---------------------------------------
+
+    def tick(self) -> None:
+        """One asynchronous migration slice (see ``MigrationDriver.tick``)."""
+        self.driver.tick()
+
+    def poll(self, block: bool = False) -> None:
+        """Harvest commit verdicts that are ready (or all, if ``block``)."""
+        self.driver.poll(block=block)
+
+    def drain(self, max_ticks: int = 100_000) -> bool:
+        """Run ticks until every live request resolved (or budget ends)."""
+        ticks = 0
+        while not self.driver.done and ticks < max_ticks:
+            self.driver.tick()
+            self.driver.poll(block=True)
+            ticks += 1
+        return self.driver.done
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def done(self) -> bool:
+        return self.driver.done
+
+    @property
+    def handles(self) -> tuple[LeapHandle, ...]:
+        """This session's handles that were live at last issue (newest last);
+        terminal handles are pruned — keep your own reference to a handle
+        you want to consult after completion."""
+        return tuple(self._handles)
+
+    def live_handles(self) -> list[LeapHandle]:
+        return [h for h in self._handles if not h.done]
+
+
+class _StaticPolicy:
+    """Adapter: a fixed move list as a PlacementPolicy."""
+
+    def __init__(self, moves):
+        self._moves = list(moves)
+
+    def decide(self, facade):
+        return self._moves

@@ -24,7 +24,13 @@ from repro.core.adaptive import (
     pad_to_bucket,
     split_area,
 )
-from repro.core.driver import FreeList, LeapConfig, MigrationDriver, MigrationStats
+from repro.core.driver import (
+    FreeList,
+    LeapConfig,
+    MigrationDriver,
+    MigrationStats,
+    RequestState,
+)
 from repro.core.baselines import (
     AutoBalanceConfig,
     AutoBalancer,
@@ -57,6 +63,7 @@ __all__ = [
     "LeapConfig",
     "MigrationDriver",
     "MigrationStats",
+    "RequestState",
     "AutoBalanceConfig",
     "AutoBalancer",
     "SyncResharder",

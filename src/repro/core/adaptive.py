@@ -38,6 +38,11 @@ class Area:
     dst_region: int
     attempts: int = 0
     huge: bool = False  # one huge block: G aligned members, run copy, all-or-nothing commit
+    # Request plumbing: every area belongs to exactly one submitted request
+    # (a LeapHandle); splits and demotions inherit both fields so per-handle
+    # accounting and cancellation survive arbitrary re-fragmentation.
+    request_id: int = -1
+    priority: int = 0
     # Filled by the driver when the area's epoch opens:
     dst_slots: np.ndarray | None = None
     copied: int = 0  # number of blocks already copied this epoch
@@ -47,13 +52,26 @@ class Area:
 
 
 def decompose_request(
-    block_ids: np.ndarray, src_region: int, dst_region: int, initial_area_blocks: int
+    block_ids: np.ndarray,
+    src_region: int,
+    dst_region: int,
+    initial_area_blocks: int,
+    request_id: int = -1,
+    priority: int = 0,
 ) -> list[Area]:
     """Chop a migration request into areas of at most the initial size."""
     out = []
     for start in range(0, len(block_ids), initial_area_blocks):
         ids = np.asarray(block_ids[start : start + initial_area_blocks], dtype=np.int32)
-        out.append(Area(block_ids=ids, src_region=src_region, dst_region=dst_region))
+        out.append(
+            Area(
+                block_ids=ids,
+                src_region=src_region,
+                dst_region=dst_region,
+                request_id=request_id,
+                priority=priority,
+            )
+        )
     return out
 
 
@@ -112,6 +130,8 @@ def split_area(
                 src_region=area.src_region,
                 dst_region=area.dst_region,
                 attempts=area.attempts + 1,
+                request_id=area.request_id,
+                priority=area.priority,
             )
         )
     return out
@@ -143,6 +163,8 @@ def demote_area(
                 dst_region=area.dst_region,
                 attempts=area.attempts,
                 huge=False,
+                request_id=area.request_id,
+                priority=area.priority,
             )
         )
     return out

@@ -90,6 +90,19 @@ class SyncResharder:
         nbytes = len(todo) * self.pool_cfg.block_bytes
         return state, SyncReshardResult(todo, failed, nbytes, bytes_touched + nbytes)
 
+    def migrate_driver(self, driver, block_ids, dst_region: int) -> SyncReshardResult:
+        """Run the synchronous baseline against a driver-managed pool.
+
+        This is the sanctioned entry point for callers outside core: it
+        shares the driver's live host mirrors (mutated in place, so the
+        mirror stays exact) without leaking them through the public surface.
+        """
+        state, res = self.migrate(
+            driver.state, driver._table, driver._free, block_ids, dst_region
+        )
+        driver.state = state
+        return res
+
 
 @partial(jax.jit, donate_argnames=("state",), static_argnames=("dst_region",))
 def _zero_fill_impl(state: LeapState, slots: jax.Array, dst_region: int) -> LeapState:
@@ -129,6 +142,49 @@ class AutoBalancer:
 
     def observe_writes(self, n_writes: int) -> None:
         self.recent_writes += n_writes
+
+    # -- driver-facing entry points (no private leakage outside core) --------
+
+    def observe_driver(self, driver, block_ids, reader_region: int) -> None:
+        """Record reads against a driver's live placement mirror."""
+        self.observe_reads(block_ids, reader_region, driver._table)
+
+    def scan_driver(self, driver) -> int:
+        """One balancing scan over a driver-managed pool; returns blocks moved."""
+        driver.state, moved = self.scan(driver.state, driver._table, driver._free)
+        return moved
+
+    def decide(self, facade) -> list[tuple[np.ndarray, int]]:
+        """:class:`repro.api.PlacementPolicy`: the balancer's counters as moves.
+
+        Same hot/pressure heuristics as :meth:`scan`, but instead of forcing
+        the copies itself it hands ``(block_ids, dst_region)`` decisions to a
+        :class:`repro.api.LeapSession` (``session.apply(balancer)``), which
+        migrates them *reliably* through the leap protocol — the heuristic
+        trigger with the explicit mechanism underneath.
+        """
+        n_blocks = len(self.remote_counts)
+        pressure = self.recent_writes / max(n_blocks, 1)
+        self.recent_writes = 0.0
+        if pressure > self.cfg.pressure_threshold:
+            return []
+        hot = np.nonzero(self.remote_counts >= self.cfg.hot_threshold)[0]
+        if len(hot) == 0:
+            self.remote_counts *= self.cfg.decay
+            return []
+        hot = hot[np.argsort(-self.remote_counts[hot])][: self.cfg.scan_budget_blocks]
+        moves: list[tuple[np.ndarray, int]] = []
+        for dst in np.unique(self.preferred_region[hot]):
+            if dst < 0:
+                continue
+            ids = hot[self.preferred_region[hot] == dst]
+            ids = ids[: facade.free_slots(int(dst))]
+            if len(ids) == 0:
+                continue
+            moves.append((ids.astype(np.int32), int(dst)))
+            self.remote_counts[ids] = 0.0
+        self.remote_counts *= self.cfg.decay
+        return moves
 
     def scan(
         self,

@@ -21,11 +21,21 @@ across all areas, and one ``commit_areas`` returning a packed verdict vector
 lengths are padded to geometric buckets so the jit cache stays at O(log n)
 entries under adaptive splitting.  ``fused_dispatch=False`` selects the
 legacy per-chunk/per-area dispatch path (the benchmark baseline).
+
+Request plumbing (DESIGN.md §6): callers submit through
+:meth:`MigrationDriver.submit`, which registers a :class:`RequestState` and
+stamps every produced :class:`Area` with its request id and priority.  The
+queue drains strictly high-priority-first; verdict processing credits each
+commit/force back to its request and fires completion callbacks, which is
+what :class:`repro.api.LeapHandle` futures observe.  ``request()`` and
+``drain()`` survive as deprecation shims over the default
+:class:`repro.api.LeapSession`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
 
 import jax
@@ -70,6 +80,7 @@ class MigrationStats:
     blocks_requested: int = 0
     blocks_migrated: int = 0
     blocks_forced: int = 0
+    blocks_cancelled: int = 0  # dropped by cancel_request before committing
     bytes_copied: int = 0  # includes retry traffic (Table 2 accounting)
     dirty_rejections: int = 0
     splits: int = 0
@@ -146,6 +157,86 @@ class FreeList:
 
 
 @dataclasses.dataclass
+class RequestState:
+    """Per-request accounting: the driver-side half of a ``LeapHandle``.
+
+    Every block a request enqueued ends in exactly one of three buckets —
+    ``committed`` (clean commit remapped it), ``forced`` (write-through
+    escalation moved it), or ``cancelled`` (dropped by
+    :meth:`MigrationDriver.cancel_request` before it could commit) — so
+    ``committed + forced + cancelled == requested`` holds at termination.
+    """
+
+    rid: int
+    dst_region: int
+    priority: int = 0
+    requested: int = 0
+    committed: int = 0
+    forced: int = 0
+    cancelled: int = 0
+    cancel_requested: bool = False
+    callbacks: list = dataclasses.field(default_factory=list)
+
+    @property
+    def remaining(self) -> int:
+        return self.requested - self.committed - self.forced - self.cancelled
+
+    @property
+    def done(self) -> bool:
+        return self.remaining == 0
+
+
+class _AreaQueue:
+    """Priority-ordered area queue: strictly higher ``Area.priority`` first,
+    FIFO within one priority class.  ``appendleft`` returns a requeued area
+    to the head of its own class (preserving the legacy deque semantics for
+    single-priority workloads)."""
+
+    def __init__(self):
+        self._buckets: dict[int, deque[Area]] = {}
+
+    def _bucket(self, priority: int) -> deque[Area]:
+        b = self._buckets.get(priority)
+        if b is None:
+            b = self._buckets[priority] = deque()
+        return b
+
+    def __len__(self) -> int:
+        return sum(len(b) for b in self._buckets.values())
+
+    def __iter__(self):
+        for p in sorted(self._buckets, reverse=True):
+            yield from self._buckets[p]
+
+    def append(self, area: Area) -> None:
+        self._bucket(area.priority).append(area)
+
+    def appendleft(self, area: Area) -> None:
+        self._bucket(area.priority).appendleft(area)
+
+    def extend(self, areas) -> None:
+        for a in areas:
+            self.append(a)
+
+    def popleft(self) -> Area:
+        for p in sorted(self._buckets, reverse=True):
+            b = self._buckets[p]
+            if b:
+                return b.popleft()
+        raise IndexError("pop from empty _AreaQueue")
+
+    def remove_request(self, rid: int) -> list[Area]:
+        """Drop (and return) every queued area belonging to request ``rid``."""
+        dropped = []
+        for p, b in self._buckets.items():
+            keep = deque()
+            for a in b:
+                (dropped if a.request_id == rid else keep).append(a)
+            self._buckets[p] = keep
+        return dropped
+
+
+@dataclasses.dataclass
 class _CommitBatch:
     """One in-flight commit dispatch: areas packed into a single verdict."""
 
@@ -197,11 +288,17 @@ class MigrationDriver:
                 for r in range(pool_cfg.n_regions)
             ]
             self.tiers = None
-        self._queue: deque[Area] = deque()
+        self._queue = _AreaQueue()
         self._active: list[Area] = []
         self._pending: list[_CommitBatch] = []
         self._migrating = np.zeros(state.n_blocks, dtype=bool)  # open requests
         self._cache_baseline = migrator.program_cache_size()
+        # Request registry: rid -> accounting record shared with LeapHandles.
+        # Holds LIVE requests only; terminal ones are pruned when their
+        # callbacks fire (handles keep their own reference).
+        self.requests: dict[int, RequestState] = {}
+        self._next_rid = 0
+        self._default_session = None  # lazily built repro.api.LeapSession
 
     # -- application-facing I/O (everything mutating goes through here) ----
 
@@ -228,22 +325,37 @@ class MigrationDriver:
 
     # -- migration API ------------------------------------------------------
 
-    def request(self, block_ids, dst_region: int) -> int:
-        """Enqueue migration of ``block_ids`` to ``dst_region``.
+    def submit(
+        self,
+        block_ids,
+        dst_region: int,
+        priority: int = 0,
+        callbacks=(),
+    ) -> RequestState:
+        """Enqueue migration of ``block_ids`` to ``dst_region`` as one request.
 
         Blocks already at the destination or already under migration are
-        skipped (duplicates within one call are deduplicated).  On a tiered
-        pool, a request touching any member of a huge block migrates the
-        whole block as ONE huge area (the level-1 entry is the migration
-        unit, exactly like a huge page).  Returns the number of blocks
-        actually enqueued (huge areas count all their members).
+        skipped (duplicates within one call are deduplicated — the request
+        only accounts for blocks it actually enqueued).  On a tiered pool, a
+        request touching any member of a huge block migrates the whole block
+        as ONE huge area (the level-1 entry is the migration unit, exactly
+        like a huge page).  Higher ``priority`` requests drain strictly
+        before lower ones.  ``callbacks`` are invoked with the
+        :class:`RequestState` once every enqueued block has committed, been
+        forced, or been cancelled; a request that enqueues nothing completes
+        (and fires callbacks) immediately.
         """
+        rid = self._next_rid
+        self._next_rid += 1
+        req = RequestState(rid=rid, dst_region=dst_region, priority=priority)
+        req.callbacks.extend(callbacks)
+        self.requests[rid] = req
         block_ids = np.unique(np.asarray(block_ids, dtype=np.int32))
         enqueued = 0
         if self.tiers is not None:
             hmask = self.tiers.is_huge(block_ids)
             for g in np.unique(self.tiers.group_of(block_ids[hmask])):
-                enqueued += self._request_huge(int(g), dst_region)
+                enqueued += self._request_huge(int(g), dst_region, rid, priority)
             block_ids = block_ids[~hmask]
         mask = (self._table[block_ids, REGION] != dst_region) & ~self._migrating[
             block_ids
@@ -258,19 +370,91 @@ class MigrationDriver:
             for src in np.unique(srcs):
                 ids = block_ids[srcs == src]
                 self._queue.extend(
-                    decompose_request(ids, int(src), dst_region, self.cfg.initial_area_blocks)
+                    decompose_request(
+                        ids,
+                        int(src),
+                        dst_region,
+                        self.cfg.initial_area_blocks,
+                        request_id=rid,
+                        priority=priority,
+                    )
                 )
-        return enqueued + len(block_ids)
+        req.requested = enqueued + len(block_ids)
+        if req.done:
+            self._fire_callbacks(req)
+        return req
 
-    def _request_huge(self, g: int, dst_region: int) -> int:
+    def _request_huge(self, g: int, dst_region: int, rid: int, priority: int) -> int:
         members = self.tiers.members(g)
         src = int(self._table[members[0], REGION])
         if src == dst_region or self._migrating[members].any():
             return 0
         self._migrating[members] = True
         self.stats.blocks_requested += len(members)
-        self._queue.append(Area(members, src, dst_region, huge=True))
+        self._queue.append(
+            Area(members, src, dst_region, huge=True, request_id=rid, priority=priority)
+        )
         return len(members)
+
+    def cancel_request(self, rid: int) -> int:
+        """Cancel request ``rid``: drop its not-yet-opened areas immediately.
+
+        Queued areas hold no destination slots (those are reserved when an
+        epoch opens and returned before any requeue), so dropping them only
+        clears the open-request marks — ``verify_mirror()`` stays true.
+        Areas with an open epoch finish their current copy and commit
+        verdict: clean blocks still commit, dirty blocks are dropped instead
+        of requeued.  Returns the number of blocks dropped right away.
+        """
+        req = self.requests.get(rid)
+        if req is None or req.cancel_requested:
+            return 0  # unknown, already terminal (pruned), or already cancelled
+        req.cancel_requested = True
+        n = 0
+        for area in self._queue.remove_request(rid):
+            self._migrating[area.block_ids] = False
+            n += len(area)
+        if n:
+            req.cancelled += n
+            self.stats.blocks_cancelled += n
+        if req.done:
+            self._fire_callbacks(req)
+        return n
+
+    def request_in_flight(self, rid: int) -> bool:
+        """True while any area of ``rid`` has an open epoch or pending verdict."""
+        if any(a.request_id == rid for a in self._active):
+            return True
+        return any(
+            a.request_id == rid for batch in self._pending for a in batch.areas
+        )
+
+    def default_session(self):
+        """The driver's default :class:`repro.api.LeapSession` (lazily built).
+
+        The session (and its handles/facade) is the supported public surface;
+        the legacy ``request()``/``drain()`` methods delegate here.
+        """
+        if self._default_session is None:
+            from repro.api import LeapSession  # deferred: api sits above core
+
+            self._default_session = LeapSession(self)
+        return self._default_session
+
+    def request(self, block_ids, dst_region: int) -> int:
+        """Deprecated shim: ``default_session().leap(...)`` without the handle.
+
+        Returns the number of blocks actually enqueued, exactly as before.
+        Prefer :meth:`repro.api.LeapSession.leap`, which returns a
+        :class:`repro.api.LeapHandle` future with progress/cancellation.
+        """
+        warnings.warn(
+            "MigrationDriver.request() is deprecated; use "
+            "LeapSession.leap() which returns a LeapHandle",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self.default_session().leap(block_ids, dst_region).requested
 
     @property
     def done(self) -> bool:
@@ -315,6 +499,7 @@ class MigrationDriver:
         budget = self.cfg.budget_blocks_per_tick
         opened: list[Area] = []  # epochs opened this tick (fused: batch begin)
         forced: list[Area] = []  # escalations this tick (fused: batch force)
+        blocked: list[Area] = []  # areas whose destination is out of slots
         plan: list[tuple[Area, np.ndarray, np.ndarray]] = []  # copy chunks
         run_plan: list[Area] = []  # huge areas copied as whole contiguous runs
         while budget > 0:
@@ -342,10 +527,19 @@ class MigrationDriver:
                 budget -= n
                 continue
             if self._queue:
-                if not self._open_epoch(self._queue.popleft(), opened, forced):
-                    break  # destination out of slots; wait for frees
+                area = self._queue.popleft()
+                if not self._open_epoch(area, opened, forced):
+                    # Destination out of slots.  Set the area aside (it goes
+                    # back to the head of its priority class below) and keep
+                    # trying lower-priority areas: one of THEIR commits may be
+                    # what frees the blocked destination — breaking here would
+                    # let a high-priority request to a full region starve the
+                    # very migrations that could unblock it (livelock).
+                    blocked.append(area)
                 continue
             break
+        for area in reversed(blocked):
+            self._queue.appendleft(area)
         if fused:
             # Device order matters: begin before copy (epoch flags gate dirty
             # tracking), force before copy (a forced block's freed source slot
@@ -361,19 +555,22 @@ class MigrationDriver:
             migrator.program_cache_size() - self._cache_baseline
         )
 
-    def drain(self, max_ticks: int = 100_000) -> bool:
-        """Run ticks until all requested blocks migrated (or tick budget ends).
-
-        Returns True on full migration.  With write-through escalation this
-        terminates for any write workload (beyond-paper guarantee); the tick
-        cap is the analogue of the paper's 10s timeout.
+    def poll(self, block: bool = False) -> None:
+        """Harvest commit verdicts: opportunistically, or blocking until all
+        pending verdicts are on the host (``block=True``).  Public so the
+        session layer can drive the migration loop without driver privates.
         """
-        ticks = 0
-        while not self.done and ticks < max_ticks:
-            self.tick()
-            self._harvest(block=True)
-            ticks += 1
-        return self.done
+        self._harvest(block=block)
+
+    def drain(self, max_ticks: int = 100_000) -> bool:
+        """Deprecated shim over ``default_session().drain(...)``.
+
+        Runs ticks until all requested blocks migrated (or the tick budget
+        ends); returns True on full migration.  With write-through escalation
+        this terminates for any write workload (beyond-paper guarantee); the
+        tick cap is the analogue of the paper's 10s timeout.
+        """
+        return self.default_session().drain(max_ticks)
 
     # -- internals ------------------------------------------------------------
 
@@ -396,13 +593,16 @@ class MigrationDriver:
             # smaller half; otherwise wait for commits to free slots.
             if len(area) > 1 and len(self._free[area.dst_region]) > 0:
                 mid = len(area) // 2
-                a = Area(area.block_ids[:mid], area.src_region, area.dst_region, area.attempts)
-                b = Area(area.block_ids[mid:], area.src_region, area.dst_region, area.attempts)
+                a = Area(area.block_ids[:mid], area.src_region, area.dst_region,
+                         area.attempts, request_id=area.request_id,
+                         priority=area.priority)
+                b = Area(area.block_ids[mid:], area.src_region, area.dst_region,
+                         area.attempts, request_id=area.request_id,
+                         priority=area.priority)
                 self._queue.appendleft(b)
                 self._queue.appendleft(a)
                 return True
-            self._queue.appendleft(area)
-            return False
+            return False  # caller re-queues (tick sets it aside, tries others)
         area.dst_slots = slots
         area.copied = 0
         if area.attempts >= self.cfg.max_attempts_before_force:
@@ -450,8 +650,7 @@ class MigrationDriver:
                     demote_area(area, self.cfg.reduction_factor, self.cfg.min_area_blocks)
                 )
                 return True
-            self._queue.appendleft(area)
-            return False
+            return False  # caller re-queues (tick sets it aside, tries others)
         area.dst_slots = start + np.arange(self.pool_cfg.huge_factor, dtype=np.int32)
         area.copied = 0
         if self.cfg.fused_dispatch:
@@ -695,11 +894,17 @@ class MigrationDriver:
         # Clean blocks: the remap took effect on device; mirror it.
         self._remap_host(area.block_ids[clean], area.dst_region, area.dst_slots[clean])
         self.stats.blocks_migrated += int(clean.sum())
-        # Dirty blocks: stale copies; free reserved slots and requeue smaller.
+        self._credit(area, committed=int(clean.sum()))
+        # Dirty blocks: stale copies; free reserved slots and requeue smaller —
+        # unless the owning request was cancelled, in which case the in-flight
+        # epoch ends here: drop the dirty remainder instead of retrying.
         n_dirty = int(dirty.sum())
         if n_dirty:
             self.stats.dirty_rejections += n_dirty
             self._free[area.dst_region].put(area.dst_slots[dirty])
+            if self._cancelled(area):
+                self._drop_blocks(area, area.block_ids[dirty])
+                return
             subs = split_area(area, dirty, self.cfg.reduction_factor, self.cfg.min_area_blocks)
             self.stats.splits += max(0, len(subs) - 1)
             self._queue.extend(subs)
@@ -719,6 +924,7 @@ class MigrationDriver:
             self.tiers.relocate(g, area.dst_region, int(area.dst_slots[0]))
             self.stats.blocks_migrated += G
             self.stats.huge_areas_committed += 1
+            self._credit(area, committed=G)
             return
         # Rejected: a member was written during the run's copy epoch.  Free
         # the reserved destination run and either retry the run whole or —
@@ -728,6 +934,9 @@ class MigrationDriver:
         self._free[area.dst_region].free_run(int(area.dst_slots[0]))
         area.attempts += 1
         area.dst_slots = None
+        if self._cancelled(area):
+            self._drop_blocks(area, area.block_ids)
+            return
         if area.attempts >= self.cfg.demote_after_attempts:
             self._demote_group(g)
             subs = demote_area(area, self.cfg.reduction_factor, self.cfg.min_area_blocks)
@@ -746,6 +955,45 @@ class MigrationDriver:
     def _finalize_success(self, area: Area) -> None:
         # Force path: all blocks flipped on device; mirror and free sources.
         self._remap_host(area.block_ids, area.dst_region, area.dst_slots)
+        self._credit(area, forced=len(area))
+
+    # -- per-request accounting ------------------------------------------------
+
+    def _credit(self, area: Area, committed: int = 0, forced: int = 0) -> None:
+        req = self.requests.get(area.request_id)
+        if req is None:
+            return
+        req.committed += committed
+        req.forced += forced
+        if req.done:
+            self._fire_callbacks(req)
+
+    def _cancelled(self, area: Area) -> bool:
+        req = self.requests.get(area.request_id)
+        return req is not None and req.cancel_requested
+
+    def _drop_blocks(self, area: Area, ids: np.ndarray) -> None:
+        """Abandon blocks of a cancelled request mid-flight: their reserved
+        destination slots are already returned by the caller; clear the open
+        marks and account them as cancelled."""
+        self._migrating[ids] = False
+        self.stats.blocks_cancelled += len(ids)
+        req = self.requests.get(area.request_id)
+        if req is None:
+            return
+        req.cancelled += len(ids)
+        if req.done:
+            self._fire_callbacks(req)
+
+    def _fire_callbacks(self, req: RequestState) -> None:
+        # The request is terminal: fire callbacks and prune it from the
+        # registry so a long-running server does not accumulate one record
+        # per request forever.  Handles keep working — they hold the
+        # RequestState object itself, not the registry entry.
+        callbacks, req.callbacks = list(req.callbacks), []
+        for cb in callbacks:
+            cb(req)
+        self.requests.pop(req.rid, None)
 
     def _remap_host(self, ids: np.ndarray, dst_region: int, dst_slots: np.ndarray) -> None:
         """Mirror a device remap: free old sources, point ids at (dst, slots)."""
@@ -838,6 +1086,32 @@ class MigrationDriver:
 
     def host_placement(self) -> np.ndarray:
         return self._table[:, REGION].copy()
+
+    def host_table(self) -> np.ndarray:
+        """Copy of the exact host table mirror ``[n_blocks, (region, slot)]``."""
+        return self._table.copy()
+
+    def regions_of(self, block_ids) -> np.ndarray:
+        """Current regions of just ``block_ids`` (fancy-indexed copy — O(k),
+        not a full-table copy; the facade's hot-path accessor)."""
+        return self._table[np.asarray(block_ids, dtype=np.int64), REGION]
+
+    def slots_of(self, block_ids) -> np.ndarray:
+        """Current slots of just ``block_ids`` (fancy-indexed copy)."""
+        return self._table[np.asarray(block_ids, dtype=np.int64), SLOT]
+
+    def free_slots(self, region: int) -> int:
+        """Number of free pooled slots on ``region`` right now."""
+        return len(self._free[region])
+
+    def debug_free_list(self, region: int):
+        """The region's live allocator (FreeList or BuddyAllocator).
+
+        Mutable, and shared with the driver — for tests and the in-core
+        baselines only (e.g. to fabricate fragmentation).  Everything else
+        should go through :meth:`free_slots` / the read-only facade.
+        """
+        return self._free[region]
 
     def verify_mirror(self) -> bool:
         """Debug: host table mirror must match device table exactly."""

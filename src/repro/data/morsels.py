@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import LeapHandle, LeapSession
 from repro.core import LeapConfig, MigrationDriver, PoolConfig, init_state
 
 
@@ -79,14 +80,22 @@ class MorselStore:
 
     # -- migration -------------------------------------------------------------
 
+    @property
+    def session(self) -> LeapSession:
+        return self.driver.default_session()
+
+    def leap(self, morsel_ids, dst_region: int, priority: int = 0) -> LeapHandle:
+        """Asynchronously migrate morsels; returns a trackable handle."""
+        return self.session.leap(np.asarray(morsel_ids), dst_region, priority=priority)
+
     def steal(self, morsel_ids, dst_region: int) -> int:
-        return self.driver.request(np.asarray(morsel_ids), dst_region)
+        return self.leap(morsel_ids, dst_region).requested
 
     def placement(self) -> np.ndarray:
         return self.driver.host_placement()
 
     def tick(self) -> None:
-        self.driver.tick()
+        self.session.tick()
 
     def drain(self, max_ticks: int = 100_000) -> bool:
-        return self.driver.drain(max_ticks)
+        return self.session.drain(max_ticks)

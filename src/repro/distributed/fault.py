@@ -17,17 +17,19 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import MigrationDriver
-from repro.core.state import REGION
+
+# Evacuations outrank routine placement traffic in the priority queue.
+DRAIN_PRIORITY = 10
 
 
 def drain_plan(driver: MigrationDriver, failed_region: int) -> dict[int, np.ndarray]:
     """Blocks to evacuate from ``failed_region``, spread round-robin over
     surviving regions (capacity-aware: fills the freest regions first)."""
-    table = driver._table
-    victims = np.nonzero(table[:, REGION] == failed_region)[0].astype(np.int32)
+    placement = driver.host_placement()
+    victims = np.nonzero(placement == failed_region)[0].astype(np.int32)
     n_regions = driver.pool_cfg.n_regions
     survivors = [r for r in range(n_regions) if r != failed_region]
-    free = {r: len(driver._free[r]) for r in survivors}
+    free = {r: driver.free_slots(r) for r in survivors}
     plan: dict[int, list[int]] = {r: [] for r in survivors}
     order = sorted(survivors, key=lambda r: -free[r])
     i = 0
@@ -45,24 +47,29 @@ def drain_plan(driver: MigrationDriver, failed_region: int) -> dict[int, np.ndar
 
 
 def drain_region(driver: MigrationDriver, failed_region: int) -> int:
-    """Request evacuation of every block on ``failed_region``; returns count."""
+    """Request evacuation of every block on ``failed_region``; returns count.
+
+    Evacuations are submitted at :data:`DRAIN_PRIORITY` so they overtake any
+    routine migration traffic already queued.
+    """
+    session = driver.default_session()
     plan = drain_plan(driver, failed_region)
     n = 0
     for dst, ids in plan.items():
-        n += driver.request(ids, dst)
+        n += session.leap(ids, dst, priority=DRAIN_PRIORITY).requested
     return n
 
 
 def spread_plan(driver: MigrationDriver, new_region: int, frac: float | None = None):
     """On grow: move a fair share of blocks onto the new region."""
-    table = driver._table
+    placement = driver.host_placement()
     n_regions = driver.pool_cfg.n_regions
     frac = frac if frac is not None else 1.0 / n_regions
     take = []
     for r in range(n_regions):
         if r == new_region:
             continue
-        mine = np.nonzero(table[:, REGION] == r)[0]
+        mine = np.nonzero(placement == r)[0]
         k = int(len(mine) * frac)
         take.extend(mine[:k].tolist())
     return np.asarray(take, np.int32)
@@ -70,23 +77,24 @@ def spread_plan(driver: MigrationDriver, new_region: int, frac: float | None = N
 
 def rebalance_even(driver: MigrationDriver) -> int:
     """Even out block counts across regions (straggler mitigation helper)."""
-    table = driver._table
+    session = driver.default_session()
+    placement = driver.host_placement()
     n_regions = driver.pool_cfg.n_regions
-    counts = np.bincount(table[:, REGION], minlength=n_regions)
+    counts = np.bincount(placement, minlength=n_regions)
     target = int(np.ceil(counts.sum() / n_regions))
     moved = 0
     for src in np.argsort(-counts):
         excess = counts[src] - target
         if excess <= 0:
             continue
-        victims = np.nonzero(table[:, REGION] == src)[0][:excess]
+        victims = np.nonzero(placement == src)[0][:excess]
         for dst in np.argsort(counts):
             if counts[dst] >= target or dst == src:
                 continue
             room = target - counts[dst]
             ids = victims[:room]
             victims = victims[room:]
-            moved += driver.request(ids.astype(np.int32), int(dst))
+            moved += session.leap(ids.astype(np.int32), int(dst)).requested
             counts[dst] += len(ids)
             counts[src] -= len(ids)
             if len(victims) == 0:

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import LeapHandle, Move
 from repro.configs.base import ModelConfig
 from repro.core import LeapConfig, MigrationDriver, PoolConfig, init_state
 from repro.core.state import REGION, SLOT
@@ -120,6 +121,10 @@ class PagedEngine:
         placement = np.repeat(np.arange(pcfg.n_regions), pages_per_region)
         state = init_state(self.pool_cfg, n_blocks, placement.astype(np.int32))
         self.driver = MigrationDriver(state, self.pool_cfg, pcfg.leap)
+        # The engine drives migration exclusively through the handle-based
+        # session API; the sealed facade is its only placement view.
+        self.session = self.driver.default_session()
+        self.facade = self.session.facade
         if G > 1:
             n_groups = n_blocks // G
             groups_per_region = pages_per_region // G
@@ -184,7 +189,7 @@ class PagedEngine:
         ids.append(b)
         if len(ids) == G:
             self._partial.discard(g)
-            region = int(self.driver._table[g * G, REGION])
+            region = int(self.facade.region_of(g * G))
             self._free_groups[region].append(g)
         else:
             self._partial.add(g)
@@ -221,9 +226,9 @@ class PagedEngine:
     def release(self, sid: int) -> None:
         seq = self.seqs.pop(sid)
         if self.pcfg.huge_factor == 1:
-            table = self.driver._table
-            for b in seq.block_ids:
-                self._free_blocks[int(table[b, REGION])].append(b)
+            regions = self.facade.region_of(np.asarray(seq.block_ids, np.int64))
+            for b, r in zip(seq.block_ids, regions):
+                self._free_blocks[int(r)].append(b)
             return
         for b in seq.block_ids + self._seq_spare.pop(sid, []):
             self._return_block(b)
@@ -290,18 +295,47 @@ class PagedEngine:
 
     # -- migration ------------------------------------------------------------------
 
-    def rebalance(self, sid: int, dst_region: int) -> int:
-        """Leap-migrate a live sequence's pages to another region."""
+    def decide(self, facade) -> list[Move]:
+        """:class:`repro.api.PlacementPolicy`: sequence affinity as moves.
+
+        Every live sequence's KV pages should sit on its declared home
+        region; any page observed elsewhere (admission fallback, a stale
+        rebalance) yields one move tagged with the sequence id.  Policy only
+        — the session owns the mechanism (``session.apply(engine)``).
+        """
+        moves = []
+        for sid, seq in self.seqs.items():
+            if not seq.block_ids:
+                continue
+            ids = np.asarray(seq.block_ids, np.int32)
+            if (facade.region_of(ids) != seq.region).any():
+                moves.append(Move(ids, seq.region, tag=sid))
+        return moves
+
+    def rebalance(self, sid: int, dst_region: int) -> LeapHandle:
+        """Leap-migrate a live sequence's pages to another region.
+
+        Declares the sequence's new home and lets the engine's own placement
+        policy (:meth:`decide`) drive the session; returns the
+        :class:`LeapHandle` tracking this sequence's move (``.requested`` is
+        the page count; decoding continues while it progresses).
+        """
         seq = self.seqs[sid]
-        n = self.driver.request(np.asarray(seq.block_ids, np.int32), dst_region)
         seq.region = dst_region
-        return n
+        for handle in self.session.apply(self):
+            if handle.tag == sid:
+                return handle
+        # Every page already home: issue a vacuous (instantly-complete) handle
+        # so callers always get a future to wait on.
+        return self.session.leap(
+            np.asarray(seq.block_ids, np.int32), dst_region, tag=sid
+        )
 
     def tick(self) -> None:
-        self.driver.tick()
+        self.session.tick()
 
     def drain(self) -> bool:
-        return self.driver.drain()
+        return self.session.drain()
 
 
 def _flatten_cache(cache, cfg: ModelConfig):

@@ -1,0 +1,66 @@
+"""Tier-1 guard: nothing outside ``src/repro/core`` reaches into driver
+privates.  The facade/session API exists precisely so benchmarks, examples,
+serving, and the distributed helpers never need ``drv._table``-style
+spelunking; this test keeps them honest.
+"""
+
+import pathlib
+import re
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# Private MigrationDriver attributes/methods (host mirrors, queue state, and
+# internal dispatch/verdict machinery).  Accessing ANY of these on a non-self
+# object outside src/repro/core is a leak.
+_PRIVATE = (
+    "table|free|queue|active|pending|migrating|last_write|policy|"
+    "cache_baseline|next_rid|default_session|harvest|alloc|open_epoch|"
+    "open_epoch_huge|request_huge|demote_group|finalize_success|remap_host|"
+    "note_writes|credit|cancelled|drop_blocks|fire_callbacks|pad|"
+    "dispatch_begin_batch|dispatch_force_batch|dispatch_copy_batch|"
+    "dispatch_commit_batch|dispatch_copy_runs|dispatch_commit_groups|"
+    "dispatch_copy|dispatch_commit|next_copyable"
+)
+# `(?<!self)` lets classes use their OWN private attrs (e.g. the engine's
+# _free_blocks is additionally saved by the name lookahead); the lookahead
+# keeps `_free` from matching `_free_blocks`/`_free_groups`.
+_LEAK = re.compile(r"(?<!self)\.\s*_(?:" + _PRIVATE + r")(?![A-Za-z0-9_])")
+
+SCANNED_DIRS = ["benchmarks", "examples", "src/repro", "tests"]
+EXEMPT = {
+    # the mechanism itself and this scanner
+    "src/repro/core",
+    "tests/test_api_boundaries.py",
+}
+
+
+def _exempt(path: pathlib.Path) -> bool:
+    rel = path.relative_to(REPO).as_posix()
+    return any(rel == e or rel.startswith(e + "/") for e in EXEMPT)
+
+
+def test_no_private_driver_access_outside_core():
+    offenders = []
+    for d in SCANNED_DIRS:
+        for path in sorted((REPO / d).rglob("*.py")):
+            if _exempt(path):
+                continue
+            for i, line in enumerate(path.read_text().splitlines(), 1):
+                if _LEAK.search(line):
+                    offenders.append(
+                        f"{path.relative_to(REPO)}:{i}: {line.strip()}"
+                    )
+    assert not offenders, (
+        "private MigrationDriver attribute access outside src/repro/core "
+        "(use the LeapSession/PoolFacade API or the driver's public "
+        "accessors):\n" + "\n".join(offenders)
+    )
+
+
+def test_benchmarks_and_examples_import_cleanly_scoped_api():
+    """Benchmarks/examples may import repro.api and repro.core publics; the
+    scan above plus this smoke keeps the dependency direction honest."""
+    import repro.api as api
+
+    for name in ("LeapSession", "LeapHandle", "PoolFacade", "PlacementPolicy"):
+        assert hasattr(api, name)

@@ -210,15 +210,17 @@ def test_driver_slot_accounting_no_leak():
         drv.request(np.arange(16), dst_region=dst)
         assert drv.drain()
     # after ping-pong, exactly n_blocks slots used in total
-    used = sum(cfg.slots_per_region - len(f) for f in drv._free)
+    used = sum(
+        cfg.slots_per_region - drv.free_slots(r) for r in range(cfg.n_regions)
+    )
     assert used == 16
     # free lists contain no duplicates and no in-use slots
-    for r, f in enumerate(drv._free):
-        assert len(set(f)) == len(f)
-        in_use = set(
-            int(s) for b, s in enumerate(drv._table[:, 1]) if drv._table[b, 0] == r
-        )
-        assert not (set(f) & in_use)
+    table = drv.host_table()
+    for r in range(cfg.n_regions):
+        f = set(drv.debug_free_list(r))
+        assert len(f) == drv.free_slots(r)
+        in_use = set(int(s) for b, s in enumerate(table[:, 1]) if table[b, 0] == r)
+        assert not (f & in_use)
 
 
 # Property tests over arbitrary interleavings: see test_property_migrator.py.

@@ -96,7 +96,7 @@ def test_huge_block_migrates_as_single_run_copy():
     assert s.huge_areas_committed == 1
     assert s.bytes_copied == s.bytes_copied_huge == G * cfg.block_bytes
     assert s.blocks_migrated == G
-    table = drv._table
+    table = drv.host_table()
     assert (table[:G, 0] == 1).all()
     start = table[0, 1]
     assert start % G == 0  # buddy alignment survives migration
@@ -160,8 +160,8 @@ def test_fragmented_destination_demotes():
     the huge block instead of stalling."""
     cfg, drv, data = make_tiered(n_blocks=8, slots=16)
     # fragment region 1: pin every other slot via direct buddy reservation
-    drv._free[1].reserve(np.arange(0, 16, 2))
-    assert drv._free[1].take_run() is None and len(drv._free[1]) == 8
+    drv.debug_free_list(1).reserve(np.arange(0, 16, 2))
+    assert drv.debug_free_list(1).take_run() is None and drv.free_slots(1) == 8
     drv.request(np.arange(G), 1)
     assert drv.drain()
     assert drv.stats.demotions == 1
@@ -228,7 +228,7 @@ def test_adopt_huge_requires_contiguity():
     assert drv.drain()
     drv.request([0], 0)
     assert drv.drain()
-    assert drv._table[0, 1] != 0  # block 0 no longer on slot 0
+    assert drv.host_table()[0, 1] != 0  # block 0 no longer on slot 0
     adopted = drv.adopt_huge(np.arange(4))
     assert adopted == 3  # group 0 is no longer an ascending contiguous run
     assert not drv.tiers.tier[0] and drv.tiers.tier[1:].all()
@@ -294,7 +294,7 @@ def test_engine_huge_rebalance_while_decoding(model):
         steps += 1
     assert eng.drain()
     assert eng.driver.stats.huge_areas_committed >= 1
-    table = eng.driver._table
+    table = eng.driver.host_table()
     # every page that existed at rebalance time landed on region 1 (frontier
     # pages allocated afterwards may still draw from region-0 spare groups)
     assert (table[moved, 0] == 1).all()
@@ -328,7 +328,7 @@ def test_engine_demotion_under_live_appends(model):
         steps += 1
     assert eng.driver.done
     assert eng.driver.stats.demotions >= 1, "frontier huge block must demote"
-    table = eng.driver._table
+    table = eng.driver.host_table()
     assert (table[np.asarray(eng.seqs[sid].block_ids), 0] == 1).all(), (
         "demoted blocks must all eventually migrate"
     )

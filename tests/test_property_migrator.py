@@ -69,7 +69,9 @@ def test_property_interleaved_writes_preserve_contents(
     np.testing.assert_array_equal(np.asarray(drv.read(np.arange(n_blocks))), expected)
     assert drv.verify_mirror()
     # slot accounting invariant
-    used = sum(cfg.slots_per_region - len(f) for f in drv._free)
+    used = sum(
+        cfg.slots_per_region - drv.free_slots(r) for r in range(cfg.n_regions)
+    )
     assert used == n_blocks
 
 
@@ -85,6 +87,8 @@ def test_property_random_requests_slot_conservation(seed):
         ids = rng.choice(n_blocks, size=rng.integers(1, n_blocks + 1), replace=False)
         drv.request(ids, dst_region=int(rng.integers(0, n_regions)))
         assert drv.drain()
-    used = sum(cfg.slots_per_region - len(f) for f in drv._free)
+    used = sum(
+        cfg.slots_per_region - drv.free_slots(r) for r in range(cfg.n_regions)
+    )
     assert used == n_blocks
     assert drv.verify_mirror()

@@ -128,5 +128,7 @@ def test_property_tiered_interleavings_preserve_contents(
         np.asarray(drv.read(jnp.arange(n_blocks))), expected
     )
     # slot conservation: live allocations exactly cover the logical blocks
-    used = sum(cfg.slots_per_region - len(f) for f in drv._free)
+    used = sum(
+        cfg.slots_per_region - drv.free_slots(r) for r in range(cfg.n_regions)
+    )
     assert used == n_blocks

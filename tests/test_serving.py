@@ -97,9 +97,10 @@ def test_decode_correct_under_live_migration(setup):
         got.extend(eng.decode([sid]))  # concurrent decode (appends!)
     assert eng.drain()
     # all pages ended up on region 1
-    table = eng.driver._table
     seq = eng.seqs[sid]
-    assert all(int(table[b, 0]) == 1 for b in seq.block_ids)
+    assert all(
+        int(r) == 1 for r in eng.facade.region_of(np.asarray(seq.block_ids))
+    )
     assert got == want, (got, want)
     assert eng.driver.stats.blocks_migrated + eng.driver.stats.blocks_forced >= 3
 
@@ -128,6 +129,33 @@ def test_paged_engine_moe_arch():
     for _ in range(3):
         got.extend(eng.decode([sid]))
     assert got == want, (got, want)
+
+
+def test_rebalance_returns_handle_and_engine_is_a_policy(setup):
+    """rebalance() hands back a LeapHandle future, and the engine's own
+    ``decide()`` (sequence affinity) drives the session — policy separated
+    from mechanism."""
+    from repro.api import HandleStatus
+
+    cfg, params = setup
+    eng = _engine(cfg, params)
+    sid = eng.admit(np.arange(8) % cfg.vocab_size)
+    n_pages = len(eng.seqs[sid].block_ids)
+    h = eng.rebalance(sid, dst_region=1)
+    assert h.tag == sid and h.requested == n_pages
+    assert h.wait()
+    assert h.status == HandleStatus.COMMITTED
+    p = h.progress()
+    assert p.committed + p.forced == p.requested == n_pages
+    regions = eng.facade.region_of(np.asarray(eng.seqs[sid].block_ids))
+    assert (np.asarray(regions) == 1).all()
+    # once every page is home, the affinity policy proposes nothing
+    assert eng.decide(eng.facade) == []
+    # cancellation on the serving path leaks nothing
+    h2 = eng.rebalance(sid, dst_region=0)
+    h2.cancel()
+    assert h2.done and eng.drain()
+    assert eng.driver.verify_mirror()
 
 
 # Hypothesis property test over arbitrary decode/tick/rebalance schedules:
