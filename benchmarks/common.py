@@ -69,17 +69,25 @@ def make_pool(
     seed: int = 0,
     huge_factor: int = 1,
     adopt: bool = False,
+    topology=None,
 ):
     """A filled leap pool: every region can pool-hold everything (paper setup).
 
     With ``huge_factor`` G > 1 the pool is two-tier; ``adopt=True`` raises
     every aligned group to the huge tier in place (the dense initial placement
     already sits on aligned contiguous runs, so adoption is zero-copy).
+    ``topology`` attaches a :class:`repro.topology.NumaTopology` (link-aware
+    scheduling); None keeps the uniform scheduler.
     """
     elems = block_kb * 1024 // 4
     slack = huge_factor if huge_factor > 1 else 1
     cfg = PoolConfig(
-        n_regions, n_blocks + slack, (1, elems), jnp.float32, huge_factor=huge_factor
+        n_regions,
+        n_blocks + slack,
+        (1, elems),
+        jnp.float32,
+        huge_factor=huge_factor,
+        topology=topology,
     )
     state = init_state(cfg, n_blocks, np.full(n_blocks, initial_region, np.int32))
     rng = np.random.default_rng(seed)

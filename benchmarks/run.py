@@ -13,11 +13,20 @@ trajectory survives the run).  Run:
 
 import argparse
 import importlib
+import importlib.util
 import json
 import os
 import sys
 import time
 import traceback
+
+# Make `python -m benchmarks.run` work without the PYTHONPATH=src
+# incantation: resolve the src/ layout ourselves when `repro` isn't already
+# importable (an installed or PYTHONPATH'd copy wins).
+if importlib.util.find_spec("repro") is None:  # pragma: no cover - env shim
+    sys.path.insert(
+        0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    )
 
 SUITES = [
     ("fig1_local_remote", "run", {}),
@@ -30,6 +39,7 @@ SUITES = [
     ("table2_overhead", "run", {}),
     ("fig8_tpch", "run", {}),
     ("fig9_dispatch", "run", {}),
+    ("fig10_topology", "run", {}),
     ("serving_rebalance", "run", {}),
 ]
 

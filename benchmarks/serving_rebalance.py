@@ -67,9 +67,21 @@ def run():
 
     for mode in ("none", "live", "sync"):  # compile-cache warmup
         decode_run(mode)
-    base, t_base = decode_run("none")
-    live, t_live = decode_run("live")
-    sync, t_sync = decode_run("sync")
+
+    # Interleave the repetitions round-robin so every mode samples the same
+    # host-load phases, then take each mode's best: noise only ever adds
+    # time, and correlated load cancels out of the slowdown ratios the CI
+    # bench gate enforces.
+    outs: dict = {}
+    times: dict = {"none": [], "live": [], "sync": []}
+    for _ in range(3):
+        for mode in ("none", "live", "sync"):
+            toks, dt = decode_run(mode)
+            outs.setdefault(mode, toks)
+            times[mode].append(dt)
+    base, t_base = outs["none"], min(times["none"])
+    live, t_live = outs["live"], min(times["live"])
+    sync, t_sync = outs["sync"], min(times["sync"])
     assert live == base, "live migration changed decode outputs!"
     assert sync == base
     tps = STEPS * len(prompts)

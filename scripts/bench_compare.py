@@ -1,0 +1,265 @@
+"""CI perf-regression gate over the ``BENCH_<suite>.json`` benchmark results.
+
+CI has uploaded machine-readable benchmark results since the suites learned
+to persist them; this script finally *enforces* the trajectory: it diffs a
+run's ``bench-results/BENCH_*.json`` against committed baselines in
+``benchmarks/baselines/`` and fails (exit 1) on regressions.
+
+Two classes of metric, two thresholds:
+
+* **Key metrics** (``--threshold``, default 25%): values that are stable
+  across machines because they are deterministic or computed *within* one
+  run — the ``k=v`` pairs a row's ``derived`` column carries, gated by the
+  whitelists below (``modeled=33.0`` modeled completion time and
+  ``speedup=x4.71`` compare multiplicatively; ``slowdown=4%`` and
+  ``mem_overhead=2.3%`` compare by percentage-point difference, since they
+  can legitimately sit at or below zero).  A scheduler or protocol
+  regression moves these by construction.
+* **Wall clock** (``--wall-threshold``, default 200% = fail past 3x): raw
+  ``us_per_call``.  Host wall time on shared CI runners jitters 2x+ for
+  sub-50ms rows, so this is a catastrophe detector (a hang, an accidental
+  O(n^2), a lost fast path), not a microbenchmark gate — the tight gating
+  happens on the key metrics above.  To cancel uniform machine-speed
+  differences, each row is judged against the *median* current/baseline
+  ratio across all rows (a 1.4× slower runner shifts the median, not the
+  verdict; needs >= 3 rows, else the factor is 1).
+
+Also enforced: a suite whose JSON says ``ok: false`` fails, and a row that
+exists in the baseline but vanished from the current run fails (a silently
+dropped benchmark is a regression of coverage).  Rows and suites that are
+new (no baseline) are reported but pass — commit a baseline to start gating
+them.
+
+Seed / refresh baselines from a run's artifacts:
+
+    python -m benchmarks.run --outdir bench-results
+    python scripts/bench_compare.py --results bench-results --write-baselines
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import shutil
+import statistics
+import sys
+
+DEFAULT_THRESHOLD = 0.25
+# Wall clock is a catastrophe detector only (default: fail past 3x after
+# calibration) — sub-50ms rows on shared CI runners jitter 2x+.  Every suite
+# carries deterministic key metrics that are gated at the tight threshold;
+# tighten --wall-threshold explicitly on quiet dedicated hardware.
+DEFAULT_WALL_THRESHOLD = 2.0
+MIN_CALIBRATION_ROWS = 3
+MIN_US = 50.0  # rows faster than this are pure noise on any host; not gated
+
+# Gated ``derived`` keys (exact match).  Only metrics stable by construction
+# belong here; fast within-run wall metrics (``speedup_warm``,
+# ``time_overhead``, ``cold_us``) stay ungated — a ~20ms drain's ratio is as
+# noisy as us_per_call itself.
+#
+# Ratio metrics compare multiplicatively (+1 lower-is-better, -1 higher-is-
+# better): deterministic quantities like fig10's modeled completion time or
+# fig9/table2's dispatches-per-tick (control-path cost).
+RATIO_METRICS = {
+    "modeled": +1,
+    "speedup": -1,
+    "disp_per_tick": +1,
+}
+# Difference metrics compare by absolute point increase — they can
+# legitimately sit at or below zero (a -3% "slowdown", 0 warm jit misses),
+# where multiplicative thresholds are meaningless.  Value = allowed increase
+# in points on top of ``threshold * |baseline|``: tight for deterministic
+# accounting (mem_overhead, jit misses), loose for measured decode slowdown
+# (min-of-reps wall ratios still jitter by ~10 points on shared runners).
+DIFF_METRICS = {
+    "slowdown": 25.0,
+    "mem_overhead": 2.0,
+    "jit_misses_warm": 2.0,
+}
+
+_NUM = re.compile(r"^x?(-?\d+(?:\.\d+)?)%?$")
+
+
+def parse_derived(derived: str) -> dict[str, float]:
+    """``"a=4%;b=x1.3;note"`` -> ``{"a": 4.0, "b": 1.3}`` (numeric pairs only)."""
+    out = {}
+    for part in str(derived).split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        m = _NUM.match(v.strip())
+        if m:
+            out[k.strip()] = float(m.group(1))
+    return out
+
+
+def _judge_metric(key: str, base: float, cur: float, threshold: float) -> bool | None:
+    """True = regression, False = fine, None = key not gated."""
+    if key in RATIO_METRICS:
+        direction = RATIO_METRICS[key]
+        worse, better = (cur, base) if direction > 0 else (base, cur)
+        return worse > better * (1.0 + threshold) and worse > 0
+    if key in DIFF_METRICS:
+        return cur - base > DIFF_METRICS[key] + threshold * abs(base)
+    return None
+
+
+def load_results(dirpath: str) -> dict[str, dict]:
+    """``suite -> parsed BENCH json`` for every BENCH_*.json in ``dirpath``."""
+    out = {}
+    for path in sorted(glob.glob(os.path.join(dirpath, "BENCH_*.json"))):
+        with open(path) as f:
+            data = json.load(f)
+        suite = data.get("suite") or os.path.basename(path)[len("BENCH_") : -len(".json")]
+        out[suite] = data
+    return out
+
+
+def compare(
+    current: dict[str, dict],
+    baseline: dict[str, dict],
+    threshold: float = DEFAULT_THRESHOLD,
+    wall_threshold: float = DEFAULT_WALL_THRESHOLD,
+    min_us: float = MIN_US,
+) -> tuple[list[str], list[str]]:
+    """Returns (failures, notes).  Empty failures == gate passes."""
+    failures: list[str] = []
+    notes: list[str] = []
+    wall_ratios: list[tuple[str, float]] = []  # (row key, current/baseline)
+
+    for suite in sorted(baseline.keys() - current.keys()):
+        # A baselined suite that produced no BENCH file at all is the same
+        # coverage regression as a dropped row — a removed CI step or a
+        # broken --only selection must not pass silently.
+        failures.append(f"{suite}: baselined suite produced no BENCH json this run")
+    for suite, cur in sorted(current.items()):
+        if not cur.get("ok", False):
+            failures.append(f"{suite}: suite did not complete (ok=false)")
+            continue
+        base = baseline.get(suite)
+        if base is None:
+            notes.append(f"{suite}: no baseline committed (new suite; not gated)")
+            continue
+        cur_rows = {r["name"]: r for r in cur.get("rows", [])}
+        base_rows = {r["name"]: r for r in base.get("rows", [])}
+        for name in sorted(base_rows.keys() - cur_rows.keys()):
+            failures.append(f"{suite}: row {name!r} present in baseline but missing now")
+        for name in sorted(cur_rows.keys() - base_rows.keys()):
+            notes.append(f"{suite}: new row {name!r} (not gated)")
+        for name in sorted(cur_rows.keys() & base_rows.keys()):
+            key = f"{suite}:{name}"
+            # -- key metrics from the derived column (machine-independent) --
+            b_m = parse_derived(base_rows[name].get("derived", ""))
+            c_m = parse_derived(cur_rows[name].get("derived", ""))
+            for mk in sorted(b_m.keys() & c_m.keys()):
+                verdict = _judge_metric(mk, b_m[mk], c_m[mk], threshold)
+                if verdict is None:
+                    continue
+                if verdict:
+                    failures.append(
+                        f"{key} [{mk}]: {b_m[mk]:g} -> {c_m[mk]:g} "
+                        f"(past the key-metric threshold) FAIL"
+                    )
+                else:
+                    notes.append(f"{key} [{mk}]: {b_m[mk]:g} -> {c_m[mk]:g} ok")
+            # -- wall clock (noisy; calibrated, catastrophe-only) -----------
+            if "modeled" in b_m or "modeled" in c_m:
+                # modeled rows carry machine-independent time in us_per_call
+                # (already gated above at the tight threshold); including
+                # their pinned ~1.0 ratios here would poison the machine-
+                # speed calibration median and flag them on faster hosts
+                continue
+            b, c = base_rows[name]["us_per_call"], cur_rows[name]["us_per_call"]
+            if b < min_us or c < min_us:
+                notes.append(f"{key}: under {min_us:.0f}us; wall noise-exempt")
+                continue
+            wall_ratios.append((key, c / b))
+
+    cal = 1.0
+    if len(wall_ratios) >= MIN_CALIBRATION_ROWS:
+        cal = statistics.median(r for _, r in wall_ratios)
+    notes.append(
+        f"wall calibration factor (median ratio over {len(wall_ratios)} rows): {cal:.3f}"
+    )
+    for key, ratio in wall_ratios:
+        rel = ratio / cal
+        verdict = "FAIL" if rel > 1.0 + wall_threshold else "ok"
+        line = (
+            f"{key} [wall]: {ratio:.2f}x of baseline "
+            f"({rel:.2f}x after calibration) {verdict}"
+        )
+        (failures if verdict == "FAIL" else notes).append(line)
+    return failures, notes
+
+
+def write_baselines(results_dir: str, baselines_dir: str) -> list[str]:
+    os.makedirs(baselines_dir, exist_ok=True)
+    written = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "BENCH_*.json"))):
+        dst = os.path.join(baselines_dir, os.path.basename(path))
+        shutil.copyfile(path, dst)
+        written.append(dst)
+    return written
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--results", default="bench-results", help="dir with this run's BENCH_*.json")
+    ap.add_argument(
+        "--baselines", default="benchmarks/baselines", help="dir with committed baselines"
+    )
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=DEFAULT_THRESHOLD,
+        help="max allowed regression of key (derived) metrics (0.25 = 25%%)",
+    )
+    ap.add_argument(
+        "--wall-threshold",
+        type=float,
+        default=DEFAULT_WALL_THRESHOLD,
+        help="max allowed calibrated wall-clock regression (2.0 = fail past 3x)",
+    )
+    ap.add_argument(
+        "--min-us",
+        type=float,
+        default=MIN_US,
+        help="rows faster than this (baseline or current) are wall-noise-exempt",
+    )
+    ap.add_argument(
+        "--write-baselines",
+        action="store_true",
+        help="copy the run's results over the baselines instead of gating",
+    )
+    args = ap.parse_args(argv)
+
+    if args.write_baselines:
+        for dst in write_baselines(args.results, args.baselines):
+            print(f"baseline <- {dst}")
+        return 0
+
+    current = load_results(args.results)
+    if not current:
+        print(f"no BENCH_*.json found under {args.results!r}", file=sys.stderr)
+        return 2
+    baseline = load_results(args.baselines)
+    failures, notes = compare(
+        current, baseline, args.threshold, args.wall_threshold, args.min_us
+    )
+    for n in notes:
+        print(f"  {n}")
+    if failures:
+        print(f"\nbench-gate: {len(failures)} regression(s):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"\nbench-gate: OK ({len(current)} suite(s) gated)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,8 +10,6 @@ no ``_``-prefixed driver attributes).
 
 from __future__ import annotations
 
-import dataclasses
-
 import numpy as np
 
 
@@ -70,6 +68,15 @@ class PoolFacade:
         """The pool's static description (a frozen dataclass — safe to share)."""
         return self._driver.pool_cfg
 
+    @property
+    def topology(self):
+        """The pool's :class:`repro.topology.NumaTopology`, or None (uniform).
+
+        Placement policies read this to prefer cheap links when choosing
+        destinations (distance-aware ``decide()``).
+        """
+        return self._driver.topology
+
     # -- migration state ---------------------------------------------------
 
     @property
@@ -81,8 +88,9 @@ class PoolFacade:
         return self._driver.pending_blocks
 
     def snapshot_stats(self):
-        """Copy of the driver's :class:`MigrationStats` at this instant."""
-        return dataclasses.replace(self._driver.stats)
+        """Copy of the driver's :class:`MigrationStats` at this instant
+        (deep enough that the per-link dict is independent too)."""
+        return self._driver.stats.snapshot()
 
     # -- debug invariants (read-only checks; safe to expose) ---------------
 

@@ -14,9 +14,12 @@ world.  ``MigrationDriver.default_session()`` returns a cached one.
 
 from __future__ import annotations
 
+import numpy as np
+
 from repro.api.facade import PoolFacade
 from repro.api.handle import LeapHandle
-from repro.api.policy import MoveLike, PlacementPolicy, as_move
+from repro.api.policy import Move, MoveLike, PlacementPolicy, as_move
+from repro.topology import spill_assignments
 
 
 class LeapSession:
@@ -57,15 +60,27 @@ class LeapSession:
             self._handles.append(handle)
         return handle
 
-    def apply(self, policy: PlacementPolicy, priority: int = 0) -> list[LeapHandle]:
+    def apply(
+        self, policy: PlacementPolicy, priority: int = 0, reroute: bool = True
+    ) -> list[LeapHandle]:
         """Run a placement policy: one tracked request per returned move.
 
         ``priority`` is the default for moves whose own priority is None
-        (an explicit 0 on a move is honored).
+        (an explicit 0 on a move is honored).  When the pool has a
+        :class:`repro.topology.NumaTopology` attached and ``reroute`` is on,
+        moves whose destination lacks free capacity spill their overflow to
+        the nearest regions (by distance from the intended destination) that
+        still have room, instead of stalling behind a full region — so one
+        move may fan out into SEVERAL handles (every sub-move inherits the
+        move's ``tag``, which is the stable join key back to the policy's
+        decision; a fully-satisfied move still yields one instantly-complete
+        handle).  Without a topology, handles map 1:1 onto moves.
         """
+        moves = [as_move(m) for m in policy.decide(self.facade)]
+        if reroute and self.facade.topology is not None:
+            moves = self._reroute_moves(moves)
         handles = []
-        for m in policy.decide(self.facade):
-            move = as_move(m)
+        for move in moves:
             handles.append(
                 self.leap(
                     move.block_ids,
@@ -76,9 +91,50 @@ class LeapSession:
             )
         return handles
 
-    def submit_moves(self, moves: list[MoveLike], priority: int = 0) -> list[LeapHandle]:
-        """Like :meth:`apply` for an explicit move list."""
-        return self.apply(_StaticPolicy(moves), priority=priority)
+    def _reroute_moves(self, moves: list[Move]) -> list[Move]:
+        """Topology-aware capacity spill: keep each move's intent, divert the
+        blocks its destination cannot hold to the nearest region with room
+        (never to one farther from the destination than where a block
+        already sits — see :func:`repro.topology.spill_assignments`)."""
+        topo = self.facade.topology
+        spare = {
+            r: self.facade.free_slots(r) for r in range(self.facade.n_regions)
+        }
+        out: list[Move] = []
+        for move in moves:
+            ids = np.asarray(move.block_ids, dtype=np.int32)
+            regions = (
+                np.asarray(self.facade.region_of(ids))
+                if len(ids)
+                else np.zeros(0, np.int32)
+            )
+            away = regions != move.dst_region
+            assigned, leftover = spill_assignments(
+                topo, ids[away], regions[away], move.dst_region, spare
+            )
+            # The primary move keeps everything meant for the destination:
+            # the capacity grant, blocks already home (vacuous to the driver
+            # but observed by the handle), and leftovers no region improves
+            # on — those wait for capacity via the driver's blocked-area
+            # logic.  Spills become sibling moves sharing the move's tag.
+            primary = np.concatenate(
+                [ids[~away], leftover]
+                + [s for s, r in assigned if r == move.dst_region]
+            ).astype(np.int32)
+            spills = [(s, r) for s, r in assigned if r != move.dst_region]
+            if len(primary) or not spills:
+                out.append(_submove(move, primary, move.dst_region))
+            for sub_ids, region in spills:
+                out.append(_submove(move, sub_ids, region))
+        return out
+
+    def submit_moves(
+        self, moves: list[MoveLike], priority: int = 0, reroute: bool = True
+    ) -> list[LeapHandle]:
+        """Like :meth:`apply` for an explicit move list.  ``reroute=False``
+        pins every move to its stated destination (wait for capacity there
+        instead of spilling to near regions)."""
+        return self.apply(_StaticPolicy(moves), priority=priority, reroute=reroute)
 
     # -- driving the migration loop ---------------------------------------
 
@@ -114,6 +170,17 @@ class LeapSession:
 
     def live_handles(self) -> list[LeapHandle]:
         return [h for h in self._handles if not h.done]
+
+
+def _submove(move: Move, block_ids, dst_region: int) -> Move:
+    """A copy of ``move`` with new block ids / destination (tag and priority
+    preserved, so spilled sub-moves stay attributable to their origin)."""
+    return Move(
+        np.asarray(block_ids, dtype=np.int32),
+        int(dst_region),
+        priority=move.priority,
+        tag=move.tag,
+    )
 
 
 class _StaticPolicy:

@@ -18,6 +18,7 @@ from repro.core.state import (
 )
 from repro.core.adaptive import (
     Area,
+    area_blocks_for_distance,
     bucket_size,
     decompose_request,
     demote_area,
@@ -54,6 +55,7 @@ __all__ = [
     "group_in_flight",
     "huge_read",
     "Area",
+    "area_blocks_for_distance",
     "bucket_size",
     "decompose_request",
     "demote_area",

@@ -43,12 +43,21 @@ class Area:
     # accounting and cancellation survive arbitrary re-fragmentation.
     request_id: int = -1
     priority: int = 0
+    # Multi-hop routing (topology-aware scheduling): the request's true
+    # destination when ``dst_region`` is only an intermediate relay, or -1
+    # when ``dst_region`` is final.  Splits/demotions inherit it; the request
+    # is credited only when its blocks commit at the final destination.
+    final_dst: int = -1
     # Filled by the driver when the area's epoch opens:
     dst_slots: np.ndarray | None = None
     copied: int = 0  # number of blocks already copied this epoch
 
     def __len__(self) -> int:
         return len(self.block_ids)
+
+    @property
+    def final_destination(self) -> int:
+        return self.final_dst if self.final_dst >= 0 else self.dst_region
 
 
 def decompose_request(
@@ -58,6 +67,7 @@ def decompose_request(
     initial_area_blocks: int,
     request_id: int = -1,
     priority: int = 0,
+    final_dst: int = -1,
 ) -> list[Area]:
     """Chop a migration request into areas of at most the initial size."""
     out = []
@@ -70,9 +80,30 @@ def decompose_request(
                 dst_region=dst_region,
                 request_id=request_id,
                 priority=priority,
+                final_dst=final_dst,
             )
         )
     return out
+
+
+def area_blocks_for_distance(
+    initial_area_blocks: int, distance: int, reference_distance: int, min_blocks: int = 1
+) -> int:
+    """Scale the initial area size down on slow links (granularity ∝ link cost).
+
+    A copy epoch across a link that is k× the reference (fastest inter-region)
+    distance stays open ~k× longer, so the window in which a concurrent write
+    can dirty the area grows with link cost.  Shrinking the initial area by
+    the distance ratio (rounded down to a power of two, so bucketed dispatch
+    shapes are reused) keeps the per-area exposure window roughly constant
+    across links — the §4.2 adaptive-splitting logic then only has to handle
+    genuine write pressure, not link latency.
+    """
+    ratio = max(1.0, distance / max(reference_distance, 1))
+    shrink = 1
+    while shrink * 2 <= ratio:
+        shrink *= 2
+    return max(min_blocks, initial_area_blocks // shrink, 1)
 
 
 def bucket_size(n: int, growth: int = 4) -> int:
@@ -132,6 +163,7 @@ def split_area(
                 attempts=area.attempts + 1,
                 request_id=area.request_id,
                 priority=area.priority,
+                final_dst=area.final_dst,
             )
         )
     return out
@@ -165,6 +197,7 @@ def demote_area(
                 huge=False,
                 request_id=area.request_id,
                 priority=area.priority,
+                final_dst=area.final_dst,
             )
         )
     return out

@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core.state import REGION, SLOT, LeapState, PoolConfig
 from repro.core import migrator
+from repro.topology import spill_assignments
 
 
 @jax.jit
@@ -162,6 +163,13 @@ class AutoBalancer:
         :class:`repro.api.LeapSession` (``session.apply(balancer)``), which
         migrates them *reliably* through the leap protocol — the heuristic
         trigger with the explicit mechanism underneath.
+
+        Distance-aware when the facade exposes a topology: hot blocks that
+        don't fit on their preferred region spill to the nearest region (by
+        link distance from the preferred one) with free capacity — near the
+        reader still beats staying put, and cheap links beat far ones.  The
+        cheapest moves (shortest source→destination link) are emitted first
+        so the driver's per-link budgets fill fast links before slow ones.
         """
         n_blocks = len(self.remote_counts)
         pressure = self.recent_writes / max(n_blocks, 1)
@@ -173,17 +181,40 @@ class AutoBalancer:
             self.remote_counts *= self.cfg.decay
             return []
         hot = hot[np.argsort(-self.remote_counts[hot])][: self.cfg.scan_budget_blocks]
+        topo = getattr(facade, "topology", None)
+        spare = {r: facade.free_slots(r) for r in range(facade.n_regions)}
         moves: list[tuple[np.ndarray, int]] = []
         for dst in np.unique(self.preferred_region[hot]):
             if dst < 0:
                 continue
+            dst = int(dst)
             ids = hot[self.preferred_region[hot] == dst]
-            ids = ids[: facade.free_slots(int(dst))]
-            if len(ids) == 0:
+            if topo is None:
+                # uniform: take what fits; overflow waits for a later scan
+                take = min(len(ids), max(0, spare[dst]))
+                ids = ids[:take]
+                if take:
+                    moves.append((ids.astype(np.int32), dst))
+                    spare[dst] -= take
+                    self.remote_counts[ids] = 0.0
                 continue
-            moves.append((ids.astype(np.int32), int(dst)))
-            self.remote_counts[ids] = 0.0
+            assigned, _ = spill_assignments(
+                topo, ids, facade.region_of(ids.astype(np.int64)), dst, spare
+            )
+            for sub_ids, region in assigned:
+                moves.append((sub_ids.astype(np.int32), int(region)))
+                self.remote_counts[sub_ids] = 0.0
         self.remote_counts *= self.cfg.decay
+        if topo is not None:
+            # cheapest links first (mean source→destination distance over the
+            # move's blocks) so per-link budgets fill fast links before slow
+            moves.sort(
+                key=lambda m: float(
+                    topo.distance[
+                        np.asarray(facade.region_of(m[0].astype(np.int64))), m[1]
+                    ].mean()
+                )
+            )
         return moves
 
     def scan(

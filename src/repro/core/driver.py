@@ -44,6 +44,7 @@ import numpy as np
 from repro.core import migrator
 from repro.core.adaptive import (
     Area,
+    area_blocks_for_distance,
     bucket_size,
     decompose_request,
     demote_area,
@@ -73,6 +74,12 @@ class LeapConfig:
     demote_after_attempts: int = 2  # huge-commit rejections before demotion (§4.2)
     promote_cold_ticks: int = 0  # ticks since last write required to promote
     promote_per_tick: int = 0  # auto-promotions attempted per tick (0 = manual)
+    # Topology-aware scheduling knobs (active when PoolConfig.topology is set):
+    link_schedule: bool = True  # charge copies against per-link byte/dispatch budgets
+    multi_hop: bool = True  # relay via an intermediate region when 2 hops are cheaper
+    link_blocks_per_tick: int | None = None  # per-link block budget at bandwidth 1.0
+    # (None: defaults to budget_blocks_per_tick — one full-speed link can
+    # absorb the whole tick budget; slower links get proportionally less)
 
 
 @dataclasses.dataclass
@@ -92,6 +99,11 @@ class MigrationStats:
     demotions: int = 0  # huge blocks split to small under write pressure/fragmentation
     promotions: int = 0  # aligned cold runs coalesced into huge blocks
     bytes_copied_huge: int = 0  # copy traffic moved via contiguous-run programs
+    # per-link counters (topology-aware scheduling; bytes_per_link is tracked
+    # on every driver so benchmarks can model link costs post-hoc)
+    bytes_per_link: dict = dataclasses.field(default_factory=dict)  # (src, dst) -> bytes
+    deferred_congested: int = 0  # area-ticks deferred because a link budget ran dry
+    multi_hop_areas: int = 0  # first-hop areas routed via an intermediate region
 
     def extra_bytes(self, block_bytes: int) -> int:
         useful = (self.blocks_migrated + self.blocks_forced) * block_bytes
@@ -101,6 +113,11 @@ class MigrationStats:
     def dispatches_per_tick(self) -> float:
         """Device programs issued per migration tick (control-path cost)."""
         return self.dispatches / self.ticks if self.ticks else 0.0
+
+    def snapshot(self) -> "MigrationStats":
+        """Independent copy (the per-link dict included) — what the sealed
+        facade hands out, so observers can't mutate live accounting."""
+        return dataclasses.replace(self, bytes_per_link=dict(self.bytes_per_link))
 
 
 class FreeList:
@@ -259,6 +276,7 @@ class MigrationDriver:
         self.pool_cfg = pool_cfg
         self.cfg = cfg or LeapConfig()
         self.mesh = mesh
+        self.topology = pool_cfg.topology  # None -> uniform (all links equal)
         self.stats = MigrationStats()
         # Host mirrors (the driver performs every allocation/remap, so these
         # stay exact without device round-trips).
@@ -369,16 +387,7 @@ class MigrationDriver:
             srcs = self._table[block_ids, REGION]
             for src in np.unique(srcs):
                 ids = block_ids[srcs == src]
-                self._queue.extend(
-                    decompose_request(
-                        ids,
-                        int(src),
-                        dst_region,
-                        self.cfg.initial_area_blocks,
-                        request_id=rid,
-                        priority=priority,
-                    )
-                )
+                self._enqueue_routed(ids, int(src), dst_region, rid, priority)
         req.requested = enqueued + len(block_ids)
         if req.done:
             self._fire_callbacks(req)
@@ -497,26 +506,58 @@ class MigrationDriver:
                     self._dispatch_commit(area)
 
         budget = self.cfg.budget_blocks_per_tick
+        links = self._link_budgets()  # None -> uniform (all links equal)
+        skipped: set[int] = set()  # active areas deferred this tick (link dry)
         opened: list[Area] = []  # epochs opened this tick (fused: batch begin)
         forced: list[Area] = []  # escalations this tick (fused: batch force)
         blocked: list[Area] = []  # areas whose destination is out of slots
+        congested: list[Area] = []  # queued areas whose link budget ran dry
         plan: list[tuple[Area, np.ndarray, np.ndarray]] = []  # copy chunks
         run_plan: list[Area] = []  # huge areas copied as whole contiguous runs
         while budget > 0:
-            area = self._next_copyable()
+            area = self._next_copyable(skipped)
             if area is not None:
+                link = links.get((area.src_region, area.dst_region)) if links else None
                 if area.huge:
                     # A huge block copies as ONE contiguous-run move — never
-                    # chunked, whatever the budget has left (it was admitted).
+                    # chunked, whatever the budget has left (it was admitted);
+                    # a link that cannot absorb the whole run defers it whole.
+                    # Exception: a run bigger than the link's entire per-tick
+                    # budget may monopolize an untouched link — deferring it
+                    # would starve it forever (the budget resets every tick
+                    # and never reaches the run size); sending it just
+                    # stretches that tick in the hardware model instead.
+                    need = len(area) - area.copied
+                    if link is not None and link[0] < need:
+                        if link[0] == link[2] and need > link[2]:
+                            link[0] = 0  # whole-tick monopoly of this link
+                        else:
+                            skipped.add(id(area))
+                            self.stats.deferred_congested += 1
+                            continue
+                    elif link is not None:
+                        link[0] -= need
+                    self._charge_link(area.src_region, area.dst_region, need)
                     if fused:
                         run_plan.append(area)
                     else:
                         self._dispatch_copy_runs([area])
-                    budget -= len(area) - area.copied
+                    budget -= need
                     area.copied = len(area)
                     continue
                 per_area = len(area) - area.copied if fused else self.cfg.chunk_blocks
                 n = min(per_area, len(area) - area.copied, budget)
+                if link is not None:
+                    # Charge the copy against the link's byte budget; a dry
+                    # link defers the area's remainder to a later tick, and
+                    # the loop moves on to areas crossing other links.
+                    n = min(n, link[0])
+                    if n == 0:
+                        skipped.add(id(area))
+                        self.stats.deferred_congested += 1
+                        continue
+                    link[0] -= n
+                self._charge_link(area.src_region, area.dst_region, n)
                 ids = area.block_ids[area.copied : area.copied + n]
                 slots = area.dst_slots[area.copied : area.copied + n]
                 if fused:
@@ -528,16 +569,40 @@ class MigrationDriver:
                 continue
             if self._queue:
                 area = self._queue.popleft()
+                link = links.get((area.src_region, area.dst_region)) if links else None
+                if link is not None and (link[0] <= 0 or link[1] <= 0):
+                    # Opening an epoch on a saturated link would only stretch
+                    # the copy→commit race window; hold the area aside and
+                    # keep scheduling traffic that crosses other links.
+                    congested.append(area)
+                    self.stats.deferred_congested += 1
+                    continue
                 if not self._open_epoch(area, opened, forced):
-                    # Destination out of slots.  Set the area aside (it goes
-                    # back to the head of its priority class below) and keep
-                    # trying lower-priority areas: one of THEIR commits may be
-                    # what frees the blocked destination — breaking here would
-                    # let a high-priority request to a full region starve the
-                    # very migrations that could unblock it (livelock).
-                    blocked.append(area)
+                    # Destination out of slots.  A relayed first hop falls
+                    # back to the direct link (stalling behind a full relay
+                    # region would trade congestion for a livelock); anything
+                    # else is set aside (it goes back to the head of its
+                    # priority class below) while we keep trying lower-
+                    # priority areas: one of THEIR commits may be what frees
+                    # the blocked destination — breaking here would let a
+                    # high-priority request to a full region starve the very
+                    # migrations that could unblock it (livelock).
+                    if area.final_dst >= 0 and area.final_dst != area.dst_region:
+                        area.dst_region = area.final_dst
+                        area.final_dst = -1
+                        self._queue.appendleft(area)
+                    else:
+                        blocked.append(area)
+                    continue
+                if link is not None and self._active and self._active[-1] is area:
+                    # Charge the per-link epoch-open budget only for a real
+                    # open: the out-of-slots halving path requeues without
+                    # opening, and forced escalations are budget-exempt.
+                    link[1] -= 1
                 continue
             break
+        for area in reversed(congested):
+            self._queue.appendleft(area)
         for area in reversed(blocked):
             self._queue.appendleft(area)
         if fused:
@@ -570,22 +635,112 @@ class MigrationDriver:
         this terminates for any write workload (beyond-paper guarantee); the
         tick cap is the analogue of the paper's 10s timeout.
         """
+        warnings.warn(
+            "MigrationDriver.drain() is deprecated; use "
+            "default_session().drain() or LeapHandle.wait()",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         return self.default_session().drain(max_ticks)
 
     # -- internals ------------------------------------------------------------
 
-    def _next_copyable(self) -> Area | None:
+    def _next_copyable(self, skipped: set | None = None) -> Area | None:
         for a in self._active:
-            if a.copied < len(a):
+            if a.copied < len(a) and (skipped is None or id(a) not in skipped):
                 return a
         return None
 
     def _alloc(self, region: int, n: int) -> np.ndarray | None:
         return self._free[region].take(n)
 
+    # -- topology-aware scheduling helpers -------------------------------------
+
+    def _initial_area_blocks(self, src: int, dst: int) -> int:
+        """Initial area size for one link: full size on the fastest link,
+        shrunk proportionally on slower ones (adaptive.py rationale)."""
+        topo = self.topology
+        if topo is None or src == dst:
+            return self.cfg.initial_area_blocks
+        return area_blocks_for_distance(
+            self.cfg.initial_area_blocks,
+            topo.link_cost(src, dst),
+            topo.min_link_distance,
+            self.cfg.min_area_blocks,
+        )
+
+    def _enqueue_routed(
+        self, ids: np.ndarray, src: int, dst_region: int, rid: int, priority: int
+    ) -> None:
+        """Queue areas for ``ids`` on route src -> dst, possibly via a relay.
+
+        With a topology and ``multi_hop``, a link whose distance exceeds some
+        two-hop alternative is routed around: the first hop targets the relay
+        region with ``final_dst`` pointing at the true destination; the relay
+        commit re-enqueues the second (always direct) hop.
+        """
+        first_dst, final = dst_region, -1
+        if self.topology is not None and self.cfg.multi_hop:
+            route = self.topology.route(src, dst_region)
+            if len(route) == 3:
+                first_dst, final = route[1], dst_region
+        areas = decompose_request(
+            ids,
+            src,
+            first_dst,
+            self._initial_area_blocks(src, first_dst),
+            request_id=rid,
+            priority=priority,
+            final_dst=final,
+        )
+        if final >= 0:
+            self.stats.multi_hop_areas += len(areas)
+        self._queue.extend(areas)
+
+    def _charge_link(self, src: int, dst: int, n_blocks: int) -> None:
+        """Account copy traffic to its (src, dst) link (stats only; the
+        per-tick budget dicts are charged separately by the tick loop)."""
+        key = (int(src), int(dst))
+        self.stats.bytes_per_link[key] = self.stats.bytes_per_link.get(
+            key, 0
+        ) + n_blocks * self.pool_cfg.block_bytes
+
+    def _link_budgets(self) -> dict | None:
+        """Fresh per-tick ``(src, dst) -> [blocks_left, opens_left, cap]``
+        budget map (cap = the untouched per-tick block budget, so the huge
+        path can recognize a link nothing else used this tick), or None when
+        link scheduling is off (no topology / disabled)."""
+        topo = self.topology
+        if topo is None or not self.cfg.link_schedule:
+            return None
+        unit = self.cfg.link_blocks_per_tick
+        if unit is None:
+            unit = self.cfg.budget_blocks_per_tick
+        budgets: dict[tuple[int, int], list[int]] = {}
+        n = self.pool_cfg.n_regions
+        for s in range(n):
+            for d in range(n):
+                if s != d:
+                    cap = topo.link_blocks(s, d, unit)
+                    budgets[(s, d)] = [cap, int(topo.concurrency[s, d]), cap]
+        return budgets
+
     def _open_epoch(self, area: Area, opened: list[Area], forced: list[Area]) -> bool:
         if area.huge:
             return self._open_epoch_huge(area, opened)
+        if (
+            area.attempts >= self.cfg.max_attempts_before_force
+            and area.final_dst >= 0
+            and area.final_dst != area.dst_region
+        ):
+            # Escalation overrides routing: the atomic force program has no
+            # race window for the relay to shrink, so the second copy would
+            # be pure waste — and a force to the relay could share a batched
+            # force program with its own re-queued second hop (duplicate
+            # scatter lanes, undefined table order).  Force straight to the
+            # final destination instead.
+            area.dst_region = area.final_dst
+            area.final_dst = -1
         slots = self._alloc(area.dst_region, len(area))
         if slots is None:
             # Not enough pooled slots for the whole area right now.  If the
@@ -595,10 +750,10 @@ class MigrationDriver:
                 mid = len(area) // 2
                 a = Area(area.block_ids[:mid], area.src_region, area.dst_region,
                          area.attempts, request_id=area.request_id,
-                         priority=area.priority)
+                         priority=area.priority, final_dst=area.final_dst)
                 b = Area(area.block_ids[mid:], area.src_region, area.dst_region,
                          area.attempts, request_id=area.request_id,
-                         priority=area.priority)
+                         priority=area.priority, final_dst=area.final_dst)
                 self._queue.appendleft(b)
                 self._queue.appendleft(a)
                 return True
@@ -607,8 +762,13 @@ class MigrationDriver:
         area.copied = 0
         if area.attempts >= self.cfg.max_attempts_before_force:
             # Write-through escalation: fused copy+flip, cannot be dirtied.
+            # Deliberately exempt from the per-link budgets (escalation must
+            # terminate), but its traffic is still accounted to the link.
+            # (Never a relay hop here — escalation converted it to direct
+            # above — so the per-block count is exact, not doubled.)
             self.stats.bytes_copied += len(area) * self.pool_cfg.block_bytes
             self.stats.blocks_forced += len(area)
+            self._charge_link(area.src_region, area.dst_region, len(area))
             if self.cfg.fused_dispatch:
                 forced.append(area)  # device dispatch batched at end of tick
             else:
@@ -892,9 +1052,16 @@ class MigrationDriver:
             return
         clean = ~dirty
         # Clean blocks: the remap took effect on device; mirror it.
-        self._remap_host(area.block_ids[clean], area.dst_region, area.dst_slots[clean])
-        self.stats.blocks_migrated += int(clean.sum())
-        self._credit(area, committed=int(clean.sum()))
+        clean_ids = area.block_ids[clean]
+        self._remap_host(clean_ids, area.dst_region, area.dst_slots[clean])
+        if area.final_dst >= 0 and area.final_dst != area.dst_region:
+            # Relay hop committed: the blocks now sit at the intermediate
+            # region; queue the (direct) second hop.  The request is only
+            # credited when they arrive at the final destination.
+            self._relay_onward(area, clean_ids)
+        else:
+            self.stats.blocks_migrated += int(clean.sum())
+            self._credit(area, committed=int(clean.sum()))
         # Dirty blocks: stale copies; free reserved slots and requeue smaller —
         # unless the owning request was cancelled, in which case the in-flight
         # epoch ends here: drop the dirty remainder instead of retrying.
@@ -954,8 +1121,34 @@ class MigrationDriver:
 
     def _finalize_success(self, area: Area) -> None:
         # Force path: all blocks flipped on device; mirror and free sources.
+        # Never a relay hop (escalation forces direct to the final
+        # destination), so the credit is always terminal.
         self._remap_host(area.block_ids, area.dst_region, area.dst_slots)
         self._credit(area, forced=len(area))
+
+    def _relay_onward(self, area: Area, ids: np.ndarray) -> None:
+        """Second hop of a relayed area: blocks that just arrived at the
+        intermediate region continue — always direct, never re-relayed, so a
+        route is at most two hops — to the final destination.  Attempts carry
+        over: a first hop under write pressure keeps its escalation credit.
+        """
+        if len(ids) == 0:
+            return
+        if self._cancelled(area):
+            self._drop_blocks(area, ids)
+            return
+        self._migrating[ids] = True
+        subs = decompose_request(
+            ids,
+            area.dst_region,
+            area.final_dst,
+            self._initial_area_blocks(area.dst_region, area.final_dst),
+            request_id=area.request_id,
+            priority=area.priority,
+        )
+        for sub in subs:
+            sub.attempts = area.attempts
+        self._queue.extend(subs)
 
     # -- per-request accounting ------------------------------------------------
 

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.topology import NumaTopology
+
 REGION = 0  # column index of the region coordinate in ``table``
 SLOT = 1  # column index of the slot coordinate in ``table``
 
@@ -48,6 +50,11 @@ class PoolConfig:
         one region whose G logical blocks share one level-1 table entry (see
         repro.pool and DESIGN.md §5).  Must be a power of two dividing
         slots_per_region so huge runs never straddle a region boundary.
+      topology: optional :class:`repro.topology.NumaTopology` describing
+        region-pair distances and per-link bandwidth budgets.  With a
+        topology attached the driver schedules link-aware (per-link budgets,
+        congestion deferral, two-hop routing — DESIGN.md §7); ``None`` keeps
+        the uniform all-links-equal behaviour.
     """
 
     n_regions: int
@@ -56,6 +63,7 @@ class PoolConfig:
     dtype: jnp.dtype = jnp.float32
     region_axis: str | tuple[str, ...] | None = None
     huge_factor: int = 1
+    topology: "NumaTopology | None" = None
 
     def __post_init__(self):
         g = self.huge_factor
@@ -65,6 +73,11 @@ class PoolConfig:
             raise ValueError(
                 f"huge_factor {g} must divide slots_per_region "
                 f"{self.slots_per_region}"
+            )
+        if self.topology is not None and self.topology.n_regions != self.n_regions:
+            raise ValueError(
+                f"topology covers {self.topology.n_regions} regions, "
+                f"pool has {self.n_regions}"
             )
 
     @property

@@ -23,25 +23,45 @@ DRAIN_PRIORITY = 10
 
 
 def drain_plan(driver: MigrationDriver, failed_region: int) -> dict[int, np.ndarray]:
-    """Blocks to evacuate from ``failed_region``, spread round-robin over
-    surviving regions (capacity-aware: fills the freest regions first)."""
+    """Blocks to evacuate from ``failed_region``, spread over surviving regions.
+
+    Without a topology: capacity-aware round-robin (fills the freest regions
+    first).  With one (``driver.topology``): distance-tiered — victims spread
+    round-robin across the *nearest* surviving tier until its capacity is
+    exhausted, then the next tier, so an evacuation prefers fast local links
+    and only touches far (e.g. CXL) regions when the near ones are full.
+    """
     placement = driver.host_placement()
     victims = np.nonzero(placement == failed_region)[0].astype(np.int32)
     n_regions = driver.pool_cfg.n_regions
     survivors = [r for r in range(n_regions) if r != failed_region]
     free = {r: driver.free_slots(r) for r in survivors}
     plan: dict[int, list[int]] = {r: [] for r in survivors}
-    order = sorted(survivors, key=lambda r: -free[r])
-    i = 0
+    topo = driver.topology
+    if topo is None:
+        tiers = [sorted(survivors, key=lambda r: -free[r])]
+    else:
+        by_dist: dict[int, list[int]] = {}
+        for r in survivors:
+            by_dist.setdefault(topo.link_cost(failed_region, r), []).append(r)
+        tiers = [
+            sorted(by_dist[d], key=lambda r: -free[r]) for d in sorted(by_dist)
+        ]
+    ti, i = 0, 0
     for b in victims:
-        # next survivor with room
-        for _ in range(len(order)):
-            r = order[i % len(order)]
-            i += 1
-            if free[r] > len(plan[r]):
-                plan[r].append(int(b))
-                break
-        else:
+        placed = False
+        while ti < len(tiers) and not placed:
+            order = tiers[ti]
+            for _ in range(len(order)):
+                r = order[i % len(order)]
+                i += 1
+                if free[r] > len(plan[r]):
+                    plan[r].append(int(b))
+                    placed = True
+                    break
+            else:
+                ti, i = ti + 1, 0  # tier full: fall through to the next one
+        if not placed:
             raise RuntimeError("not enough surviving capacity to drain region")
     return {r: np.asarray(v, np.int32) for r, v in plan.items() if v}
 

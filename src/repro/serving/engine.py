@@ -42,6 +42,10 @@ class PagedConfig:
     n_regions: int = 2
     slots_per_region: int = 256
     leap: LeapConfig = dataclasses.field(default_factory=LeapConfig)
+    # Optional NumaTopology over the KV regions: admission fallback prefers
+    # regions near the sequence's home (cheap decode reads, cheap later
+    # rebalance) and the driver schedules migrations link-aware (§7).
+    topology: object = None
     # Two-tier KV pool: G small pages per huge block (1 = small only).  With
     # G > 1 logical page ids are handed to sequences in aligned groups of G,
     # so a long sequence's KV naturally forms promotable runs; decode
@@ -109,7 +113,12 @@ class PagedEngine:
         )
         G = pcfg.huge_factor
         self.pool_cfg = PoolConfig(
-            pcfg.n_regions, pcfg.slots_per_region, payload, cfg.dtype(), huge_factor=G
+            pcfg.n_regions,
+            pcfg.slots_per_region,
+            payload,
+            cfg.dtype(),
+            huge_factor=G,
+            topology=pcfg.topology,
         )
         # Pages occupy half the physical slots; the other half is the pooled
         # migration headroom (the paper's "migration into pooled memory"
@@ -150,9 +159,18 @@ class PagedEngine:
 
     # -- admission ---------------------------------------------------------------
 
+    def _alloc_order(self, region: int) -> list[int]:
+        """Allocation fallback order: the home region first, then — with a
+        topology — the others nearest-first (a page that cannot live at home
+        should at least sit one cheap link away), else index order."""
+        topo = self.pool_cfg.topology
+        if topo is not None:
+            return [region] + topo.nearest(region)
+        return [region] + [x for x in range(self.pcfg.n_regions) if x != region]
+
     def _alloc_block(self, region: int, sid: int | None = None) -> int:
         if self.pcfg.huge_factor == 1:
-            for r in [region] + [x for x in range(self.pcfg.n_regions) if x != region]:
+            for r in self._alloc_order(region):
                 if self._free_blocks[r]:
                     return self._free_blocks[r].pop()
             raise RuntimeError("KV pool exhausted")
@@ -161,7 +179,7 @@ class PagedEngine:
         spare = self._seq_spare.get(sid)
         if spare:
             return spare.pop(0)
-        for r in [region] + [x for x in range(self.pcfg.n_regions) if x != region]:
+        for r in self._alloc_order(region):
             if self._free_groups[r]:
                 g = self._free_groups[r].pop()
                 ids = sorted(self._group_free[g])
@@ -322,7 +340,11 @@ class PagedEngine:
         """
         seq = self.seqs[sid]
         seq.region = dst_region
-        for handle in self.session.apply(self):
+        # Strict-home policy: sequence affinity means the pages go to the
+        # declared home or wait for capacity there — reroute=False so the
+        # session never spills them to neighbouring regions, and the single
+        # returned handle tracks the whole sequence move.
+        for handle in self.session.apply(self, reroute=False):
             if handle.tag == sid:
                 return handle
         # Every page already home: issue a vacuous (instantly-complete) handle

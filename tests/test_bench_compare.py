@@ -1,0 +1,237 @@
+"""The CI perf-regression gate (scripts/bench_compare.py) must pass identical
+results, fail an injected 2x regression (on both wall clock and key derived
+metrics), catch dropped rows and failed suites, and stay calm under a
+uniform machine-speed shift (median calibration)."""
+
+import importlib.util
+import json
+import os
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_compare",
+    os.path.join(os.path.dirname(__file__), "..", "scripts", "bench_compare.py"),
+)
+bench_compare = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_compare)
+
+
+def _write_suite(dirpath, suite, rows, ok=True):
+    os.makedirs(dirpath, exist_ok=True)
+    with open(os.path.join(dirpath, f"BENCH_{suite}.json"), "w") as f:
+        json.dump(
+            {
+                "suite": suite,
+                "ok": ok,
+                "elapsed_s": 1.0,
+                "rows": [
+                    {"name": n, "us_per_call": us, "derived": d}
+                    for n, us, d in rows
+                ],
+            },
+            f,
+        )
+
+
+def _gate(tmp_path, extra_args=()):
+    return bench_compare.main(
+        [
+            "--results",
+            str(tmp_path / "cur"),
+            "--baselines",
+            str(tmp_path / "base"),
+            *extra_args,
+        ]
+    )
+
+
+ROWS = [
+    ("a/x", 10_000.0, ""),
+    ("a/y", 20_000.0, ""),
+    ("a/z", 5_000.0, ""),
+    ("a/w", 40_000.0, ""),
+]
+
+
+def test_parse_derived():
+    parsed = bench_compare.parse_derived(
+        "modeled=33.0;ticks=3;speedup=x4.71;slowdown=4%;outputs=identical"
+    )
+    assert parsed == {"modeled": 33.0, "ticks": 3.0, "speedup": 4.71, "slowdown": 4.0}
+
+
+def test_identical_results_pass(tmp_path):
+    _write_suite(tmp_path / "base", "s1", ROWS)
+    _write_suite(tmp_path / "cur", "s1", ROWS)
+    assert _gate(tmp_path) == 0
+
+
+def test_injected_2x_wall_regression_fails(tmp_path):
+    # on quiet hardware the wall gate can be tightened to catch a 2x; the
+    # default threshold is catastrophe-only (shared-runner noise exceeds 2x)
+    _write_suite(tmp_path / "base", "s1", ROWS)
+    slow = [(n, us * (2.0 if n == "a/y" else 1.0), d) for n, us, d in ROWS]
+    _write_suite(tmp_path / "cur", "s1", slow)
+    assert _gate(tmp_path, ["--wall-threshold", "0.9"]) == 1
+
+
+def test_injected_4x_wall_catastrophe_fails_by_default(tmp_path):
+    _write_suite(tmp_path / "base", "s1", ROWS)
+    slow = [(n, us * (4.0 if n == "a/y" else 1.0), d) for n, us, d in ROWS]
+    _write_suite(tmp_path / "cur", "s1", slow)
+    assert _gate(tmp_path) == 1
+
+
+def test_injected_2x_key_metric_regression_fails(tmp_path):
+    # a 2x regression of a derived key metric (modeled completion time)
+    # fails the tight 25% threshold even though wall clock is identical
+    base = [("a/x", 10_000.0, "modeled=7.0;ticks=7")] + ROWS[1:]
+    cur = [("a/x", 10_000.0, "modeled=14.0;ticks=7")] + ROWS[1:]
+    _write_suite(tmp_path / "base", "s1", base)
+    _write_suite(tmp_path / "cur", "s1", cur)
+    assert _gate(tmp_path) == 1
+
+
+def test_speedup_drop_fails_and_gain_passes(tmp_path):
+    base = [("a/x", 10_000.0, "speedup=x2.00")] + ROWS[1:]
+    _write_suite(tmp_path / "base", "s1", base)
+    _write_suite(
+        tmp_path / "cur", "s1", [("a/x", 10_000.0, "speedup=x1.20")] + ROWS[1:]
+    )
+    assert _gate(tmp_path) == 1
+    _write_suite(
+        tmp_path / "cur", "s1", [("a/x", 10_000.0, "speedup=x3.00")] + ROWS[1:]
+    )
+    assert _gate(tmp_path) == 0
+
+
+def test_noisy_fast_ratio_metrics_are_not_gated(tmp_path):
+    # speedup_warm is a ~20ms within-run wall ratio: explicitly exempt
+    base = [("a/x", 10_000.0, "speedup_warm=x2.00")] + ROWS[1:]
+    cur = [("a/x", 10_000.0, "speedup_warm=x0.50")] + ROWS[1:]
+    _write_suite(tmp_path / "base", "s1", base)
+    _write_suite(tmp_path / "cur", "s1", cur)
+    assert _gate(tmp_path) == 0
+
+
+def test_small_slowdown_shift_within_slack_passes(tmp_path):
+    # slowdown is a measured decode ratio that can jitter (and go negative):
+    # small point shifts pass, a genuine jump past the point slack fails
+    base = [("a/x", 10_000.0, "slowdown=-3%")] + ROWS[1:]
+    _write_suite(tmp_path / "base", "s1", base)
+    _write_suite(tmp_path / "cur", "s1", [("a/x", 10_000.0, "slowdown=9%")] + ROWS[1:])
+    assert _gate(tmp_path) == 0
+    _write_suite(tmp_path / "cur", "s1", [("a/x", 10_000.0, "slowdown=30%")] + ROWS[1:])
+    assert _gate(tmp_path) == 1
+
+
+def test_mem_overhead_is_gated_tightly(tmp_path):
+    # deterministic accounting: small slack only
+    base = [("a/x", 10_000.0, "mem_overhead=2.3%")] + ROWS[1:]
+    _write_suite(tmp_path / "base", "s1", base)
+    _write_suite(
+        tmp_path / "cur", "s1", [("a/x", 10_000.0, "mem_overhead=3.0%")] + ROWS[1:]
+    )
+    assert _gate(tmp_path) == 0
+    _write_suite(
+        tmp_path / "cur", "s1", [("a/x", 10_000.0, "mem_overhead=10.0%")] + ROWS[1:]
+    )
+    assert _gate(tmp_path) == 1
+
+
+def test_uniform_machine_shift_is_calibrated_away(tmp_path):
+    # everything 1.6x slower (a slower CI runner): median calibration absorbs it
+    _write_suite(tmp_path / "base", "s1", ROWS)
+    _write_suite(tmp_path / "cur", "s1", [(n, us * 1.6, d) for n, us, d in ROWS])
+    assert _gate(tmp_path) == 0
+
+
+def test_regression_on_shifted_machine_still_fails(tmp_path):
+    _write_suite(tmp_path / "base", "s1", ROWS)
+    cur = [(n, us * 1.6 * (4.0 if n == "a/y" else 1.0), d) for n, us, d in ROWS]
+    _write_suite(tmp_path / "cur", "s1", cur)
+    assert _gate(tmp_path) == 1
+
+
+def test_dispatch_and_jit_key_metrics_are_gated(tmp_path):
+    # control-path regressions are deterministic derived metrics: a doubled
+    # dispatches-per-tick or a warm-compile storm fails without wall noise
+    base = [("a/x", 10_000.0, "disp_per_tick=2.00;jit_misses_warm=0")] + ROWS[1:]
+    _write_suite(tmp_path / "base", "s1", base)
+    _write_suite(
+        tmp_path / "cur",
+        "s1",
+        [("a/x", 10_000.0, "disp_per_tick=4.00;jit_misses_warm=0")] + ROWS[1:],
+    )
+    assert _gate(tmp_path) == 1
+    _write_suite(
+        tmp_path / "cur",
+        "s1",
+        [("a/x", 10_000.0, "disp_per_tick=2.00;jit_misses_warm=7")] + ROWS[1:],
+    )
+    assert _gate(tmp_path) == 1
+    _write_suite(
+        tmp_path / "cur",
+        "s1",
+        [("a/x", 10_000.0, "disp_per_tick=2.00;jit_misses_warm=1")] + ROWS[1:],
+    )
+    assert _gate(tmp_path) == 0
+
+
+def test_dropped_row_fails(tmp_path):
+    _write_suite(tmp_path / "base", "s1", ROWS)
+    _write_suite(tmp_path / "cur", "s1", ROWS[:-1])
+    assert _gate(tmp_path) == 1
+
+
+def test_failed_suite_fails(tmp_path):
+    _write_suite(tmp_path / "base", "s1", ROWS)
+    _write_suite(tmp_path / "cur", "s1", ROWS, ok=False)
+    assert _gate(tmp_path) == 1
+
+
+def test_baselined_suite_missing_from_results_fails(tmp_path):
+    # a dropped CI step (no BENCH json produced at all) is a coverage
+    # regression, exactly like a dropped row
+    _write_suite(tmp_path / "base", "s1", ROWS)
+    _write_suite(tmp_path / "base", "s2", ROWS)
+    _write_suite(tmp_path / "cur", "s1", ROWS)
+    assert _gate(tmp_path) == 1
+
+
+def test_new_suite_and_new_rows_pass_ungated(tmp_path):
+    _write_suite(tmp_path / "base", "s1", ROWS)
+    _write_suite(tmp_path / "cur", "s1", ROWS + [("a/new", 1e6, "")])
+    _write_suite(tmp_path / "cur", "s2", [("b/x", 1e6, "")])
+    assert _gate(tmp_path) == 0
+
+
+def test_modeled_rows_do_not_poison_wall_calibration(tmp_path):
+    # modeled rows carry machine-independent us_per_call (ratio pinned at
+    # 1.0); on a 3x faster host they must neither flag themselves nor skew
+    # the calibration median the genuine wall rows rely on
+    modeled = [(f"m/{i}", 7_000.0, "modeled=7.0") for i in range(6)]
+    _write_suite(tmp_path / "base", "s1", ROWS + modeled)
+    cur = [(n, us / 3.2, d) for n, us, d in ROWS] + modeled
+    _write_suite(tmp_path / "cur", "s1", cur)
+    assert _gate(tmp_path) == 0
+
+
+def test_tiny_rows_are_wall_noise_exempt(tmp_path):
+    rows = ROWS + [("a/tiny", 5.0, "")]
+    _write_suite(tmp_path / "base", "s1", rows)
+    cur = [(n, us * (10.0 if n == "a/tiny" else 1.0), d) for n, us, d in rows]
+    _write_suite(tmp_path / "cur", "s1", cur)
+    assert _gate(tmp_path) == 0
+
+
+def test_write_baselines_seeds_then_passes(tmp_path):
+    _write_suite(tmp_path / "cur", "s1", ROWS)
+    assert _gate(tmp_path, ["--write-baselines"]) == 0
+    assert (tmp_path / "base" / "BENCH_s1.json").exists()
+    assert _gate(tmp_path) == 0
+
+
+def test_empty_results_dir_is_an_error(tmp_path):
+    os.makedirs(tmp_path / "cur", exist_ok=True)
+    os.makedirs(tmp_path / "base", exist_ok=True)
+    assert _gate(tmp_path) == 2

@@ -1,0 +1,68 @@
+"""The PR-3 deprecation shims: ``MigrationDriver.request()``/``drain()`` must
+emit ``DeprecationWarning`` exactly once per call, delegate to the default
+session, and produce placement results identical to the session API."""
+
+import warnings
+
+import numpy as np
+
+from repro.core import LeapConfig, MigrationDriver, PoolConfig, init_state
+
+
+def _driver():
+    cfg = PoolConfig(n_regions=2, slots_per_region=48, block_shape=(1, 16))
+    state = init_state(cfg, 32, np.zeros(32, np.int32))
+    return MigrationDriver(state, cfg, LeapConfig())
+
+
+def test_request_warns_exactly_once_per_call():
+    drv = _driver()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        n = drv.request(np.arange(16), 1)
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "LeapSession.leap()" in str(dep[0].message)
+    assert n == 16
+
+
+def test_drain_warns_exactly_once_per_call():
+    drv = _driver()
+    with warnings.catch_warnings(record=True):
+        warnings.simplefilter("always")
+        drv.request(np.arange(16), 1)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        ok = drv.drain()
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "default_session().drain" in str(dep[0].message)
+    assert ok
+
+
+def test_shims_delegate_to_default_session_with_identical_placement():
+    # legacy path
+    legacy = _driver()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        n_legacy = legacy.request(np.arange(20), 1)
+        assert legacy.drain()
+    # session path on an identical fresh pool
+    modern = _driver()
+    handle = modern.default_session().leap(np.arange(20), 1)
+    assert handle.wait()
+    assert n_legacy == handle.requested == 20
+    np.testing.assert_array_equal(legacy.host_table(), modern.host_table())
+    assert legacy.verify_mirror() and modern.verify_mirror()
+
+
+def test_request_shim_counts_against_session_registry():
+    drv = _driver()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        drv.request(np.arange(8), 1)
+    # the shim's request is a first-class session request: it drains through
+    # the same machinery and leaves the driver fully idle afterwards
+    assert drv.pending_blocks == 8
+    assert drv.default_session().drain()
+    assert drv.done and (drv.host_placement()[:8] == 1).all()
