@@ -28,10 +28,10 @@ def run(n_blocks=256, block_kb=256):
     t_pooled, st = timeit_inplace(lambda s: copy_chunk(s, ids, slots, 1), st)
 
     # raw copy into fresh memory (zero-fill pass first, like page faults)
-    from repro.core.baselines import _zero_fill
+    from repro.core.migrator import zero_fill
 
     def fresh(s):
-        s = _zero_fill(s, slots, 1)
+        s = zero_fill(s, slots, 1)
         jax.block_until_ready(s.pool)
         return copy_chunk(s, ids, slots, 1)
 

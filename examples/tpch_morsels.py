@@ -31,17 +31,20 @@ def main():
     want_q1 = tpch.q1_reference(data, 2400.0)
     rng = np.random.default_rng(1)
 
+    # Session API: leap() returns a LeapHandle future; the sealed facade is
+    # the read-only observation surface (no driver internals needed).
+    facade = store.session.facade
     t0 = time.perf_counter()
-    store.steal(np.arange(store.n_morsels), dst_region=1)
-    while not store.driver.done:
+    handle = store.leap(np.arange(store.n_morsels), dst_region=1)
+    while not handle.done:
         store.tick()
         store.write_random_fields(rng, 8, tpch.ORDERKEY, -1.0)  # OLTP writer
-    store.drain()
+    assert handle.wait()
     t_mig = time.perf_counter() - t0
-    s = store.driver.stats
+    s = facade.snapshot_stats()
     print(f"migration: {t_mig * 1e3:.1f} ms  (retries={s.dirty_rejections}, "
-          f"splits={s.splits}, extra={s.extra_bytes(store.driver.pool_cfg.block_bytes)}B)")
-    assert (store.placement() == 1).all()
+          f"splits={s.splits}, extra={s.extra_bytes(facade.pool_cfg.block_bytes)}B)")
+    assert (store.placement() == 1).all() and facade.verify_mirror()
 
     for q, param in (("q1", 2400.0), ("q6", 730.0)):
         ts = []

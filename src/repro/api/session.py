@@ -39,6 +39,7 @@ class LeapSession:
         priority: int = 0,
         on_done=None,
         tag=None,
+        ticket=None,
     ) -> LeapHandle:
         """Asynchronously migrate ``block_ids`` to ``dst_region``.
 
@@ -47,9 +48,14 @@ class LeapSession:
         deduplicated away — the handle accounts only for blocks it enqueued
         (``handle.requested``), and a fully-deduplicated request completes
         instantly.  Higher ``priority`` requests drain strictly first.
-        ``on_done(handle)`` fires when the request resolves.
+        ``on_done(handle)`` fires when the request resolves.  ``ticket`` (a
+        :class:`repro.core.pipeline.AdmissionTicket`) overrides the driver
+        scheduler-policy's admission stamp for this one request — e.g. an
+        urgent evacuation escalates straight to the atomic force program.
         """
-        req = self.driver.submit(block_ids, dst_region, priority=priority)
+        req = self.driver.submit(
+            block_ids, dst_region, priority=priority, ticket=ticket
+        )
         handle = LeapHandle(self.driver, req, tag=tag)
         if on_done is not None:
             handle.on_done(on_done)

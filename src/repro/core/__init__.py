@@ -1,5 +1,7 @@
 """Core: `page_leap()` adapted to TPU meshes — pooled, reliable, adaptive
-block migration behind a virtual block table (see DESIGN.md §2)."""
+block migration behind a virtual block table (see DESIGN.md §2), organized
+as a staged pipeline (``repro.core.pipeline``, DESIGN.md §8) with pluggable
+scheduler policies."""
 
 from repro.core.state import (
     REGION,
@@ -25,12 +27,18 @@ from repro.core.adaptive import (
     pad_to_bucket,
     split_area,
 )
-from repro.core.driver import (
-    FreeList,
-    LeapConfig,
-    MigrationDriver,
-    MigrationStats,
-    RequestState,
+from repro.core.config import LeapConfig
+from repro.core.stats import MigrationStats, RequestState
+from repro.core.queues import AreaQueue, CommitBatch, FreeList
+from repro.core.driver import MigrationDriver
+from repro.core.pipeline import (
+    AdmissionTicket,
+    LeapScheduler,
+    SamplingConfig,
+    SamplingScheduler,
+    SchedulerPolicy,
+    SyncScheduler,
+    make_scheduler,
 )
 from repro.core.baselines import (
     AutoBalanceConfig,
@@ -61,11 +69,20 @@ __all__ = [
     "demote_area",
     "pad_to_bucket",
     "split_area",
+    "AreaQueue",
+    "CommitBatch",
     "FreeList",
     "LeapConfig",
     "MigrationDriver",
     "MigrationStats",
     "RequestState",
+    "AdmissionTicket",
+    "LeapScheduler",
+    "SamplingConfig",
+    "SamplingScheduler",
+    "SchedulerPolicy",
+    "SyncScheduler",
+    "make_scheduler",
     "AutoBalanceConfig",
     "AutoBalancer",
     "SyncResharder",

@@ -48,6 +48,11 @@ class Area:
     # when ``dst_region`` is final.  Splits/demotions inherit it; the request
     # is credited only when its blocks commit at the final destination.
     final_dst: int = -1
+    # Admission stamp (SchedulerPolicy seam): zero-fill the reserved
+    # destination slots before the copy/force lands — the page-fault
+    # analogue the move_pages()/autonuma-style schedulers pay.  Splits and
+    # demotions inherit it (a retried fragment still lands in fresh memory).
+    fresh_alloc: bool = False
     # Filled by the driver when the area's epoch opens:
     dst_slots: np.ndarray | None = None
     copied: int = 0  # number of blocks already copied this epoch
@@ -68,6 +73,7 @@ def decompose_request(
     request_id: int = -1,
     priority: int = 0,
     final_dst: int = -1,
+    fresh_alloc: bool = False,
 ) -> list[Area]:
     """Chop a migration request into areas of at most the initial size."""
     out = []
@@ -81,6 +87,7 @@ def decompose_request(
                 request_id=request_id,
                 priority=priority,
                 final_dst=final_dst,
+                fresh_alloc=fresh_alloc,
             )
         )
     return out
@@ -164,6 +171,7 @@ def split_area(
                 request_id=area.request_id,
                 priority=area.priority,
                 final_dst=area.final_dst,
+                fresh_alloc=area.fresh_alloc,
             )
         )
     return out
@@ -198,6 +206,7 @@ def demote_area(
                 request_id=area.request_id,
                 priority=area.priority,
                 final_dst=area.final_dst,
+                fresh_alloc=area.fresh_alloc,
             )
         )
     return out

@@ -11,26 +11,35 @@ over access counters; migrates a bounded number of "hot remote" blocks per
 scan, but only when observed write pressure is low (the kernel heuristic the
 paper shows "waits for times of little load ... which might never come").
 No completion guarantee, no user control.
+
+Both are **pipeline configurations**, not separate migration loops: they
+submit through :class:`repro.core.MigrationDriver` with the
+:class:`~repro.core.pipeline.SyncScheduler` /
+:class:`~repro.core.pipeline.SamplingScheduler` admission stamps (escalate
+to the atomic force program, zero-fill fresh destinations, skip busy), so
+the figure benchmarks compare *policies* over one shared dispatch/verdict
+engine.  The heuristics (busy check, hot counters, pressure gate) live in
+``repro.core.pipeline.scheduler``; this module keeps the caller-facing
+result types and the driver-facing entry points.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.state import REGION, SLOT, LeapState, PoolConfig
 from repro.core import migrator
+from repro.core.pipeline import SamplingConfig, SamplingScheduler, SyncScheduler, busy_mask
+from repro.core.state import PoolConfig
 from repro.topology import spill_assignments
 
-
-@jax.jit
-def _busy_mask(state: LeapState, block_ids: jax.Array) -> jax.Array:
-    return state.dirty[block_ids] | state.in_flight[block_ids]
+# Legacy private spellings (the zero-fill program moved to core.migrator,
+# and the busy check to the admission stage).
+_busy_mask = busy_mask
+_zero_fill = migrator.zero_fill
 
 
 @dataclasses.dataclass
@@ -42,125 +51,118 @@ class SyncReshardResult:
 
 
 class SyncResharder:
-    """``move_pages()`` analogue over a leap pool."""
+    """``move_pages()`` analogue over a leap pool.
+
+    A :class:`~repro.core.pipeline.SyncScheduler` configuration of the
+    shared pipeline: busy blocks are skipped (EBUSY, no retry), the rest are
+    escalated straight to the atomic force program with a zero-fill pass
+    over their freshly "allocated" destination slots, and the call blocks
+    until the whole request resolved — exactly the syscall's contract.
+    """
 
     def __init__(self, pool_cfg: PoolConfig, fresh_alloc: bool = True):
         self.pool_cfg = pool_cfg
         self.fresh_alloc = fresh_alloc
+        self.scheduler = SyncScheduler(fresh_alloc=fresh_alloc)
 
-    def migrate(
-        self,
-        state: LeapState,
-        table_host: np.ndarray,
-        free_slots: list[deque],
-        block_ids,
-        dst_region: int,
-    ) -> tuple[LeapState, SyncReshardResult]:
-        """Synchronously migrate ``block_ids``; the call blocks until complete."""
-        block_ids = np.asarray(block_ids, dtype=np.int32)
-        block_ids = block_ids[table_host[block_ids, REGION] != dst_region]
+    def migrate_driver(self, driver, block_ids, dst_region: int) -> SyncReshardResult:
+        """Synchronously migrate ``block_ids``; the call blocks until done.
+
+        The sanctioned entry point: routes the request through the driver's
+        staged pipeline (same dispatch/verdict engine as ``page_leap()``),
+        differing only in the admission ticket.
+        """
+        block_ids = np.unique(np.asarray(block_ids, dtype=np.int32))
+        block_ids = block_ids[driver.regions_of(block_ids) != dst_region]
+        empty = np.zeros(0, np.int32)
         if len(block_ids) == 0:
-            empty = np.zeros(0, np.int32)
-            return state, SyncReshardResult(empty, empty, 0, 0)
-        busy = np.asarray(_busy_mask(state, jnp.asarray(block_ids)))
+            return SyncReshardResult(empty, empty, 0, 0)
+        # The syscall's EBUSY set: dirty/in-flight on device, or claimed by a
+        # live leap request.  Reported as failed, never retried.
+        busy = np.asarray(busy_mask(driver.state, jnp.asarray(block_ids)))
+        busy = busy | driver.in_migration(block_ids)
         failed = block_ids[busy]
         todo = block_ids[~busy]
         if len(todo) == 0:
-            return state, SyncReshardResult(np.zeros(0, np.int32), failed, 0, 0)
-        free = free_slots[dst_region]
-        if len(free) < len(todo):
+            return SyncReshardResult(empty, failed, 0, 0)
+        if driver.free_slots(dst_region) < len(todo):
             raise RuntimeError("destination region out of slots")
-        slots = np.asarray([free.popleft() for _ in range(len(todo))], dtype=np.int32)
-        ids_d = jnp.asarray(todo)
-        slots_d = jnp.asarray(slots)
-        bytes_touched = 0
-        if self.fresh_alloc:
-            # Page-fault analogue: freshly allocated pages are zero-filled by
-            # the kernel before the copy lands. A separate dispatch prevents
-            # XLA from eliding the dead store.
-            state = _zero_fill(state, slots_d, int(dst_region))
-            jax.block_until_ready(state.pool)
-            bytes_touched += len(todo) * self.pool_cfg.block_bytes
-        state = migrator.force_migrate(state, ids_d, slots_d, int(dst_region))
-        jax.block_until_ready(state.pool)  # synchronous, like the syscall
-        for i, b in enumerate(todo.tolist()):
-            old_r, old_s = int(table_host[b, REGION]), int(table_host[b, SLOT])
-            free_slots[old_r].append(old_s)
-            table_host[b, REGION] = dst_region
-            table_host[b, SLOT] = int(slots[i])
-        nbytes = len(todo) * self.pool_cfg.block_bytes
-        return state, SyncReshardResult(todo, failed, nbytes, bytes_touched + nbytes)
-
-    def migrate_driver(self, driver, block_ids, dst_region: int) -> SyncReshardResult:
-        """Run the synchronous baseline against a driver-managed pool.
-
-        This is the sanctioned entry point for callers outside core: it
-        shares the driver's live host mirrors (mutated in place, so the
-        mirror stays exact) without leaking them through the public surface.
-        """
-        state, res = self.migrate(
-            driver.state, driver._table, driver._free, block_ids, dst_region
+        # skip_busy already applied above (to report the EBUSY ids); don't
+        # pay admission's device busy-check a second time on filtered ids.
+        ticket = dataclasses.replace(
+            self.scheduler.admission_ticket(), skip_busy=False
         )
-        driver.state = state
-        return res
-
-
-@partial(jax.jit, donate_argnames=("state",), static_argnames=("dst_region",))
-def _zero_fill_impl(state: LeapState, slots: jax.Array, dst_region: int) -> LeapState:
-    pool = state.pool.at[dst_region, slots].set(0)
-    return dataclasses.replace(state, pool=pool)
-
-
-def _zero_fill(state, slots, dst_region):
-    return _zero_fill_impl(state, slots, dst_region)
-
-
-@dataclasses.dataclass(frozen=True)
-class AutoBalanceConfig:
-    scan_budget_blocks: int = 32  # blocks migrated per scan, max
-    hot_threshold: int = 4  # remote accesses (since decay) to qualify
-    pressure_threshold: float = 0.05  # writes/block/tick above which it defers
-    decay: float = 0.5  # counter decay per scan
+        handle = driver.default_session().leap(todo, dst_region, ticket=ticket)
+        ok = handle.wait()
+        jax.block_until_ready(driver.state.pool)  # synchronous, like the syscall
+        if not ok:  # pragma: no cover - force path always terminates
+            raise RuntimeError("sync reshard did not terminate")
+        nbytes = len(todo) * self.pool_cfg.block_bytes
+        touched = 2 * nbytes if self.fresh_alloc else nbytes
+        return SyncReshardResult(todo, failed, nbytes, touched)
 
 
 class AutoBalancer:
-    """Access-pattern-driven implicit migration (no guarantees, no control)."""
+    """Access-pattern-driven implicit migration (no guarantees, no control).
 
-    def __init__(self, pool_cfg: PoolConfig, n_blocks: int, cfg: AutoBalanceConfig | None = None):
+    The sampling heuristic (remote-access counters, the defer-under-write-
+    pressure gate, per-scan budget) lives in the
+    :class:`~repro.core.pipeline.SamplingScheduler`; this wrapper turns its
+    hot picks into placement decisions and — via :meth:`scan_driver` —
+    unconditional kernel-style moves through the shared pipeline.
+    """
+
+    def __init__(
+        self,
+        pool_cfg: PoolConfig,
+        n_blocks: int,
+        cfg: SamplingConfig | None = None,
+    ):
         self.pool_cfg = pool_cfg
-        self.cfg = cfg or AutoBalanceConfig()
-        self.remote_counts = np.zeros(n_blocks, dtype=np.float64)
-        self.preferred_region = np.full(n_blocks, -1, dtype=np.int32)
-        self.recent_writes = 0.0
+        self.scheduler = SamplingScheduler(n_blocks, cfg)
         self.blocks_migrated = 0
         self.bytes_copied = 0
 
+    # -- counter views (legacy attribute surface) ----------------------------
+
+    @property
+    def cfg(self) -> SamplingConfig:
+        return self.scheduler.cfg
+
+    @property
+    def remote_counts(self) -> np.ndarray:
+        return self.scheduler.remote_counts
+
+    @property
+    def preferred_region(self) -> np.ndarray:
+        return self.scheduler.preferred_region
+
+    # -- observation ---------------------------------------------------------
+
     def observe_reads(self, block_ids, reader_region: int, table_host: np.ndarray) -> None:
         block_ids = np.asarray(block_ids)
-        remote = table_host[block_ids, REGION] != reader_region
-        np.add.at(self.remote_counts, block_ids[remote], 1.0)
-        self.preferred_region[block_ids[remote]] = reader_region
+        self.scheduler.observe_reads(
+            block_ids, reader_region, table_host[block_ids, 0]
+        )
 
     def observe_writes(self, n_writes: int) -> None:
-        self.recent_writes += n_writes
-
-    # -- driver-facing entry points (no private leakage outside core) --------
+        self.scheduler.observe_writes(n_writes)
 
     def observe_driver(self, driver, block_ids, reader_region: int) -> None:
-        """Record reads against a driver's live placement mirror."""
-        self.observe_reads(block_ids, reader_region, driver._table)
+        """Record reads against a driver's live placement."""
+        block_ids = np.asarray(block_ids)
+        self.scheduler.observe_reads(
+            block_ids, reader_region, driver.regions_of(block_ids)
+        )
 
-    def scan_driver(self, driver) -> int:
-        """One balancing scan over a driver-managed pool; returns blocks moved."""
-        driver.state, moved = self.scan(driver.state, driver._table, driver._free)
-        return moved
+    # -- decisions -----------------------------------------------------------
 
     def decide(self, facade) -> list[tuple[np.ndarray, int]]:
         """:class:`repro.api.PlacementPolicy`: the balancer's counters as moves.
 
-        Same hot/pressure heuristics as :meth:`scan`, but instead of forcing
-        the copies itself it hands ``(block_ids, dst_region)`` decisions to a
-        :class:`repro.api.LeapSession` (``session.apply(balancer)``), which
+        Same hot/pressure heuristics as :meth:`scan_driver`, but instead of
+        forcing the copies it hands ``(block_ids, dst_region)`` decisions to
+        a :class:`repro.api.LeapSession` (``session.apply(balancer)``), which
         migrates them *reliably* through the leap protocol — the heuristic
         trigger with the explicit mechanism underneath.
 
@@ -171,24 +173,19 @@ class AutoBalancer:
         cheapest moves (shortest source→destination link) are emitted first
         so the driver's per-link budgets fill fast links before slow ones.
         """
-        n_blocks = len(self.remote_counts)
-        pressure = self.recent_writes / max(n_blocks, 1)
-        self.recent_writes = 0.0
-        if pressure > self.cfg.pressure_threshold:
-            return []
-        hot = np.nonzero(self.remote_counts >= self.cfg.hot_threshold)[0]
+        sched = self.scheduler
+        hot = sched.select_hot()
         if len(hot) == 0:
-            self.remote_counts *= self.cfg.decay
             return []
-        hot = hot[np.argsort(-self.remote_counts[hot])][: self.cfg.scan_budget_blocks]
         topo = getattr(facade, "topology", None)
         spare = {r: facade.free_slots(r) for r in range(facade.n_regions)}
         moves: list[tuple[np.ndarray, int]] = []
-        for dst in np.unique(self.preferred_region[hot]):
+        moved_ids: list[np.ndarray] = []
+        for dst in np.unique(sched.preferred_region[hot]):
             if dst < 0:
                 continue
             dst = int(dst)
-            ids = hot[self.preferred_region[hot] == dst]
+            ids = hot[sched.preferred_region[hot] == dst]
             if topo is None:
                 # uniform: take what fits; overflow waits for a later scan
                 take = min(len(ids), max(0, spare[dst]))
@@ -196,15 +193,15 @@ class AutoBalancer:
                 if take:
                     moves.append((ids.astype(np.int32), dst))
                     spare[dst] -= take
-                    self.remote_counts[ids] = 0.0
+                    moved_ids.append(ids)
                 continue
             assigned, _ = spill_assignments(
                 topo, ids, facade.region_of(ids.astype(np.int64)), dst, spare
             )
             for sub_ids, region in assigned:
                 moves.append((sub_ids.astype(np.int32), int(region)))
-                self.remote_counts[sub_ids] = 0.0
-        self.remote_counts *= self.cfg.decay
+                moved_ids.append(sub_ids)
+        sched.settle(np.concatenate(moved_ids) if moved_ids else [])
         if topo is not None:
             # cheapest links first (mean source→destination distance over the
             # move's blocks) so per-link budgets fill fast links before slow
@@ -217,47 +214,36 @@ class AutoBalancer:
             )
         return moves
 
-    def scan(
-        self,
-        state: LeapState,
-        table_host: np.ndarray,
-        free_slots: list[deque],
-    ) -> tuple[LeapState, int]:
-        """One balancing scan; returns (state, blocks migrated this scan)."""
-        n_blocks = len(self.remote_counts)
-        pressure = self.recent_writes / max(n_blocks, 1)
-        self.recent_writes = 0.0
-        if pressure > self.cfg.pressure_threshold:
-            # Defers under write load — the unreliability the paper measures.
-            # (Counters are retained so the hint survives until an idle scan.)
-            return state, 0
-        hot = np.nonzero(self.remote_counts >= self.cfg.hot_threshold)[0]
-        if len(hot) == 0:
-            self.remote_counts *= self.cfg.decay
-            return state, 0
-        hot = hot[np.argsort(-self.remote_counts[hot])][: self.cfg.scan_budget_blocks]
-        moved = 0
-        for dst in np.unique(self.preferred_region[hot]):
-            if dst < 0:
-                continue
-            ids = hot[self.preferred_region[hot] == dst]
-            free = free_slots[int(dst)]
-            ids = ids[: len(free)]
-            if len(ids) == 0:
-                continue
-            slots = np.asarray([free.popleft() for _ in range(len(ids))], dtype=np.int32)
-            state = _zero_fill(state, jnp.asarray(slots), int(dst))  # fresh alloc
-            state = migrator.force_migrate(
-                state, jnp.asarray(ids.astype(np.int32)), jnp.asarray(slots), int(dst)
-            )
-            for i, b in enumerate(ids.tolist()):
-                old_r, old_s = int(table_host[b, REGION]), int(table_host[b, SLOT])
-                free_slots[old_r].append(old_s)
-                table_host[b, REGION] = int(dst)
-                table_host[b, SLOT] = int(slots[i])
-            self.remote_counts[ids] = 0.0
-            moved += len(ids)
-            self.bytes_copied += len(ids) * self.pool_cfg.block_bytes
+    # -- the kernel-style scan (unconditional moves, shared engine) ----------
+
+    def scan_driver(self, driver) -> int:
+        """One balancing scan over a driver-managed pool; returns blocks moved.
+
+        The decisions come from :meth:`decide`; execution is the pipeline's
+        force path with the sampling policy's admission stamp (fresh
+        zero-filled destinations, atomic copy+flip — what the kernel's
+        migrate-on-fault does), drained synchronously like the kernel's scan.
+        """
+        session = driver.default_session()
+        moves = self.decide(session.facade)
+        if not moves:
+            return 0
+        ticket = self.scheduler.admission_ticket()
+        handles = [
+            session.leap(ids, dst, ticket=ticket) for ids, dst in moves
+        ]
+        # Wait for THIS scan's moves only — a balancing scan must not turn
+        # into a full drain of whatever unrelated leap requests are queued.
+        ticks = 0
+        while any(not h.done for h in handles) and ticks < 100_000:
+            session.tick()
+            session.poll(block=True)
+            ticks += 1
+        moved = sum(h.progress().requested for h in handles)
         self.blocks_migrated += moved
-        self.remote_counts *= self.cfg.decay
-        return state, moved
+        self.bytes_copied += moved * self.pool_cfg.block_bytes
+        return moved
+
+
+# Legacy alias: the balancer's config used to be defined here.
+AutoBalanceConfig = SamplingConfig

@@ -1,0 +1,37 @@
+"""Tuning knobs of the migration engine (`LeapConfig`).
+
+Extracted from ``core/driver.py`` when the driver decomposed into the staged
+pipeline (``repro.core.pipeline``); ``from repro.core.driver import
+LeapConfig`` keeps working through the driver's re-export shim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class LeapConfig:
+    """Tuning knobs of the migration engine (paper defaults in comments)."""
+
+    initial_area_blocks: int = 64  # "initial area size" (16MB sweet spot)
+    reduction_factor: int = 2  # split factor on dirty retry
+    min_area_blocks: int = 1
+    chunk_blocks: int = 16  # copy-dispatch granularity (legacy dispatch path)
+    budget_blocks_per_tick: int = 64  # async migration budget per tick/step
+    max_attempts_before_force: int = 8  # write-through escalation (beyond paper)
+    backend: str = "xla"  # "xla" | "ppermute"
+    axis_name: str | None = None  # region mesh axis (ppermute backend)
+    fused_dispatch: bool = True  # batch each tick into <=3 device programs
+    bucket_growth: int = 4  # geometric padding factor for batch shapes
+    copy_impl: str | None = None  # leap_copy impl: None=auto|"pallas"|"ref"
+    # Two-tier pool knobs (active when PoolConfig.huge_factor > 1):
+    demote_after_attempts: int = 2  # huge-commit rejections before demotion (§4.2)
+    promote_cold_ticks: int = 0  # ticks since last write required to promote
+    promote_per_tick: int = 0  # auto-promotions attempted per tick (0 = manual)
+    # Topology-aware scheduling knobs (active when PoolConfig.topology is set):
+    link_schedule: bool = True  # charge copies against per-link byte/dispatch budgets
+    multi_hop: bool = True  # relay via an intermediate region when 2 hops are cheaper
+    link_blocks_per_tick: int | None = None  # per-link block budget at bandwidth 1.0
+    # (None: defaults to budget_blocks_per_tick — one full-speed link can
+    # absorb the whole tick budget; slower links get proportionally less)

@@ -2,10 +2,18 @@
 
 The paper's `page_leap()` runs its migration loop in a user-space thread:
 pick an area, copy it, check the dirty flag, remap or requeue.  Here the
-control plane is ordinary Python driving jitted device programs.  Everything
-that was "a helper structure in user-space" in the paper (the area queue,
-free-slot lists, the page-table mirror, retry/split policy, statistics)
-lives in :class:`MigrationDriver`.
+control plane is ordinary Python driving jitted device programs, decomposed
+into an explicit staged pipeline (``repro.core.pipeline``, DESIGN.md §8):
+
+  admission → routing → budget → dispatch → verdict → accounting
+
+:class:`MigrationDriver` is the thin composition root: it builds the shared
+:class:`~repro.core.pipeline.PipelineContext` (device state + exact host
+mirrors + queues), wires the stages, and keeps the stable public API.  The
+active :class:`~repro.core.pipeline.SchedulerPolicy` decides how requests
+are admitted and how fast ticks drain — the paper's baselines
+(move_pages()-style sync, autonuma-style sampling) are policies over this
+same engine, not separate code paths.
 
 Asynchrony model: every device program is dispatched asynchronously; the
 driver only blocks when it *needs* a commit verdict and the device hasn't
@@ -13,253 +21,60 @@ produced it yet.  Interleaving application write/compute steps between
 ``tick()`` calls reproduces the paper's concurrent-writer races at step
 granularity (see DESIGN.md §2).
 
-Dispatch batching (DESIGN.md §3): with ``fused_dispatch`` (the default) a
-tick issues at most three device programs — one ``begin_areas`` for every
-epoch opened this tick, one ``fused_copy`` for the whole tick's chunk plan
-across all areas, and one ``commit_areas`` returning a packed verdict vector
-(plus a rare ``force_areas`` when write-through escalation fires).  Batch
-lengths are padded to geometric buckets so the jit cache stays at O(log n)
-entries under adaptive splitting.  ``fused_dispatch=False`` selects the
-legacy per-chunk/per-area dispatch path (the benchmark baseline).
-
-Request plumbing (DESIGN.md §6): callers submit through
-:meth:`MigrationDriver.submit`, which registers a :class:`RequestState` and
-stamps every produced :class:`Area` with its request id and priority.  The
-queue drains strictly high-priority-first; verdict processing credits each
-commit/force back to its request and fires completion callbacks, which is
-what :class:`repro.api.LeapHandle` futures observe.  ``request()`` and
-``drain()`` survive as deprecation shims over the default
+Compatibility: ``LeapConfig`` / ``MigrationStats`` / ``RequestState`` /
+``FreeList`` now live in ``core/config.py`` / ``core/stats.py`` /
+``core/queues.py`` and are re-exported here, so
+``from repro.core.driver import LeapConfig`` keeps working.  ``request()``
+and ``drain()`` survive as deprecation shims over the default
 :class:`repro.api.LeapSession`.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import warnings
-from collections import deque
 
 import jax
 import numpy as np
 
 from repro.core import migrator
-from repro.core.adaptive import (
-    Area,
-    area_blocks_for_distance,
-    bucket_size,
-    decompose_request,
-    demote_area,
-    pad_to_bucket,
-    split_area,
+from repro.core.config import LeapConfig
+from repro.core.pipeline import (
+    AccountingStage,
+    AdmissionStage,
+    AdmissionTicket,
+    BudgetStage,
+    DispatchStage,
+    PipelineContext,
+    RoutingStage,
+    VerdictStage,
+    make_scheduler,
 )
-from repro.core.state import REGION, SLOT, LeapState, PoolConfig, leap_read, leap_write, leap_write_rows
+from repro.core.queues import AreaQueue, CommitBatch, FreeList, _AreaQueue, _CommitBatch
+from repro.core.state import (
+    REGION,
+    SLOT,
+    LeapState,
+    PoolConfig,
+    leap_read,
+    leap_write,
+    leap_write_rows,
+)
+from repro.core.stats import MigrationStats, RequestState
 from repro.pool import BuddyAllocator, PromotionPolicy, TwoLevelTable
 
-
-@dataclasses.dataclass(frozen=True)
-class LeapConfig:
-    """Tuning knobs of the migration engine (paper defaults in comments)."""
-
-    initial_area_blocks: int = 64  # "initial area size" (16MB sweet spot)
-    reduction_factor: int = 2  # split factor on dirty retry
-    min_area_blocks: int = 1
-    chunk_blocks: int = 16  # copy-dispatch granularity (legacy dispatch path)
-    budget_blocks_per_tick: int = 64  # async migration budget per tick/step
-    max_attempts_before_force: int = 8  # write-through escalation (beyond paper)
-    backend: str = "xla"  # "xla" | "ppermute"
-    axis_name: str | None = None  # region mesh axis (ppermute backend)
-    fused_dispatch: bool = True  # batch each tick into <=3 device programs
-    bucket_growth: int = 4  # geometric padding factor for batch shapes
-    copy_impl: str | None = None  # leap_copy impl: None=auto|"pallas"|"ref"
-    # Two-tier pool knobs (active when PoolConfig.huge_factor > 1):
-    demote_after_attempts: int = 2  # huge-commit rejections before demotion (§4.2)
-    promote_cold_ticks: int = 0  # ticks since last write required to promote
-    promote_per_tick: int = 0  # auto-promotions attempted per tick (0 = manual)
-    # Topology-aware scheduling knobs (active when PoolConfig.topology is set):
-    link_schedule: bool = True  # charge copies against per-link byte/dispatch budgets
-    multi_hop: bool = True  # relay via an intermediate region when 2 hops are cheaper
-    link_blocks_per_tick: int | None = None  # per-link block budget at bandwidth 1.0
-    # (None: defaults to budget_blocks_per_tick — one full-speed link can
-    # absorb the whole tick budget; slower links get proportionally less)
-
-
-@dataclasses.dataclass
-class MigrationStats:
-    blocks_requested: int = 0
-    blocks_migrated: int = 0
-    blocks_forced: int = 0
-    blocks_cancelled: int = 0  # dropped by cancel_request before committing
-    bytes_copied: int = 0  # includes retry traffic (Table 2 accounting)
-    dirty_rejections: int = 0
-    splits: int = 0
-    dispatches: int = 0
-    ticks: int = 0
-    jit_cache_misses: int = 0  # migration-program compiles since driver init
-    # per-tier counters (two-tier pool; all zero on a small-only pool)
-    huge_areas_committed: int = 0  # huge blocks remapped atomically as one run
-    demotions: int = 0  # huge blocks split to small under write pressure/fragmentation
-    promotions: int = 0  # aligned cold runs coalesced into huge blocks
-    bytes_copied_huge: int = 0  # copy traffic moved via contiguous-run programs
-    # per-link counters (topology-aware scheduling; bytes_per_link is tracked
-    # on every driver so benchmarks can model link costs post-hoc)
-    bytes_per_link: dict = dataclasses.field(default_factory=dict)  # (src, dst) -> bytes
-    deferred_congested: int = 0  # area-ticks deferred because a link budget ran dry
-    multi_hop_areas: int = 0  # first-hop areas routed via an intermediate region
-
-    def extra_bytes(self, block_bytes: int) -> int:
-        useful = (self.blocks_migrated + self.blocks_forced) * block_bytes
-        return max(0, self.bytes_copied - useful)
-
-    @property
-    def dispatches_per_tick(self) -> float:
-        """Device programs issued per migration tick (control-path cost)."""
-        return self.dispatches / self.ticks if self.ticks else 0.0
-
-    def snapshot(self) -> "MigrationStats":
-        """Independent copy (the per-link dict included) — what the sealed
-        facade hands out, so observers can't mutate live accounting."""
-        return dataclasses.replace(self, bytes_per_link=dict(self.bytes_per_link))
-
-
-class FreeList:
-    """LIFO free-slot list backed by a numpy array (vectorized alloc/free).
-
-    ``take``/``put`` move n slots in one slice; ``popleft``/``append``/
-    iteration keep the deque-ish API the baselines (SyncResharder,
-    AutoBalancer) and tests use.  Note ``popleft`` pops from the top of the
-    stack — callers only rely on getting *some* free slot, not on FIFO order.
-    """
-
-    def __init__(self, slots: np.ndarray):
-        slots = np.asarray(slots, dtype=np.int32)
-        self._buf = slots.copy()
-        self._n = len(slots)
-
-    def __len__(self) -> int:
-        return self._n
-
-    def __iter__(self):
-        return iter(self._buf[: self._n].tolist())
-
-    def take(self, n: int) -> np.ndarray | None:
-        """Pop ``n`` slots at once, or None if fewer are available."""
-        if self._n < n:
-            return None
-        out = self._buf[self._n - n : self._n].copy()
-        self._n -= n
-        return out
-
-    def put(self, slots: np.ndarray) -> None:
-        """Push a batch of slots."""
-        slots = np.asarray(slots, dtype=np.int32)
-        need = self._n + len(slots)
-        if need > len(self._buf):
-            grown = np.empty(max(need, 2 * len(self._buf) + 1), np.int32)
-            grown[: self._n] = self._buf[: self._n]
-            self._buf = grown
-        self._buf[self._n : need] = slots
-        self._n = need
-
-    # deque-compat shims (baselines allocate one slot at a time)
-    def popleft(self) -> int:
-        if self._n == 0:
-            raise IndexError("pop from empty FreeList")
-        self._n -= 1
-        return int(self._buf[self._n])
-
-    def append(self, slot: int) -> None:
-        self.put(np.asarray([slot], np.int32))
-
-    def extend(self, slots) -> None:
-        self.put(np.fromiter(slots, np.int32))
-
-
-@dataclasses.dataclass
-class RequestState:
-    """Per-request accounting: the driver-side half of a ``LeapHandle``.
-
-    Every block a request enqueued ends in exactly one of three buckets —
-    ``committed`` (clean commit remapped it), ``forced`` (write-through
-    escalation moved it), or ``cancelled`` (dropped by
-    :meth:`MigrationDriver.cancel_request` before it could commit) — so
-    ``committed + forced + cancelled == requested`` holds at termination.
-    """
-
-    rid: int
-    dst_region: int
-    priority: int = 0
-    requested: int = 0
-    committed: int = 0
-    forced: int = 0
-    cancelled: int = 0
-    cancel_requested: bool = False
-    callbacks: list = dataclasses.field(default_factory=list)
-
-    @property
-    def remaining(self) -> int:
-        return self.requested - self.committed - self.forced - self.cancelled
-
-    @property
-    def done(self) -> bool:
-        return self.remaining == 0
-
-
-class _AreaQueue:
-    """Priority-ordered area queue: strictly higher ``Area.priority`` first,
-    FIFO within one priority class.  ``appendleft`` returns a requeued area
-    to the head of its own class (preserving the legacy deque semantics for
-    single-priority workloads)."""
-
-    def __init__(self):
-        self._buckets: dict[int, deque[Area]] = {}
-
-    def _bucket(self, priority: int) -> deque[Area]:
-        b = self._buckets.get(priority)
-        if b is None:
-            b = self._buckets[priority] = deque()
-        return b
-
-    def __len__(self) -> int:
-        return sum(len(b) for b in self._buckets.values())
-
-    def __iter__(self):
-        for p in sorted(self._buckets, reverse=True):
-            yield from self._buckets[p]
-
-    def append(self, area: Area) -> None:
-        self._bucket(area.priority).append(area)
-
-    def appendleft(self, area: Area) -> None:
-        self._bucket(area.priority).appendleft(area)
-
-    def extend(self, areas) -> None:
-        for a in areas:
-            self.append(a)
-
-    def popleft(self) -> Area:
-        for p in sorted(self._buckets, reverse=True):
-            b = self._buckets[p]
-            if b:
-                return b.popleft()
-        raise IndexError("pop from empty _AreaQueue")
-
-    def remove_request(self, rid: int) -> list[Area]:
-        """Drop (and return) every queued area belonging to request ``rid``."""
-        dropped = []
-        for p, b in self._buckets.items():
-            keep = deque()
-            for a in b:
-                (dropped if a.request_id == rid else keep).append(a)
-            self._buckets[p] = keep
-        return dropped
-
-
-@dataclasses.dataclass
-class _CommitBatch:
-    """One in-flight commit dispatch: areas packed into a single verdict."""
-
-    areas: list[Area]
-    offsets: np.ndarray  # [len(areas) + 1] prefix offsets into verdict
-    verdict: jax.Array  # padded packed verdict (device)
+__all__ = [
+    # the driver itself
+    "MigrationDriver",
+    # re-export shims (pre-pipeline homes of these types)
+    "LeapConfig",
+    "MigrationStats",
+    "RequestState",
+    "FreeList",
+    "AreaQueue",
+    "CommitBatch",
+    "_AreaQueue",
+    "_CommitBatch",
+]
 
 
 class MigrationDriver:
@@ -271,75 +86,119 @@ class MigrationDriver:
         pool_cfg: PoolConfig,
         cfg: LeapConfig | None = None,
         mesh: jax.sharding.Mesh | None = None,
+        scheduler=None,  # SchedulerPolicy | "leap" | "sync" | "sampling" | None
     ):
-        self.state = state
-        self.pool_cfg = pool_cfg
-        self.cfg = cfg or LeapConfig()
-        self.mesh = mesh
-        self.topology = pool_cfg.topology  # None -> uniform (all links equal)
-        self.stats = MigrationStats()
+        cfg = cfg or LeapConfig()
         # Host mirrors (the driver performs every allocation/remap, so these
         # stay exact without device round-trips).
-        self._table = np.asarray(state.table).copy()
+        table = np.asarray(state.table).copy()
         free_mask = np.ones((pool_cfg.n_regions, pool_cfg.slots_per_region), bool)
-        free_mask[self._table[:, REGION], self._table[:, SLOT]] = False
+        free_mask[table[:, REGION], table[:, SLOT]] = False
         if pool_cfg.huge_factor > 1:
             # Two-tier pool: per-region buddy allocators (FreeList-compatible
             # for order-0 traffic) + the level-1 table.  All groups start
             # small; promote_group / adopt_huge raise them.
-            if self.cfg.backend == "ppermute":
+            if cfg.backend == "ppermute":
                 raise ValueError("the two-tier pool requires the xla copy backend")
-            self._free = []
+            free = []
             for r in range(pool_cfg.n_regions):
                 buddy = BuddyAllocator(pool_cfg.slots_per_region, pool_cfg.huge_factor)
                 buddy.reserve(np.nonzero(~free_mask[r])[0])
-                self._free.append(buddy)
-            self.tiers: TwoLevelTable | None = TwoLevelTable(
-                state.n_blocks, pool_cfg.huge_factor
-            )
-            self._policy = PromotionPolicy(cold_ticks=self.cfg.promote_cold_ticks)
-            self._last_write = np.full(state.n_blocks, -(1 << 40), dtype=np.int64)
+                free.append(buddy)
+            tiers = TwoLevelTable(state.n_blocks, pool_cfg.huge_factor)
+            promotion = PromotionPolicy(cold_ticks=cfg.promote_cold_ticks)
+            last_write = np.full(state.n_blocks, -(1 << 40), dtype=np.int64)
         else:
             # store descending so the LIFO top hands out the lowest slot first
-            self._free = [
+            free = [
                 FreeList(np.nonzero(free_mask[r])[0][::-1])
                 for r in range(pool_cfg.n_regions)
             ]
-            self.tiers = None
-        self._queue = _AreaQueue()
-        self._active: list[Area] = []
-        self._pending: list[_CommitBatch] = []
-        self._migrating = np.zeros(state.n_blocks, dtype=bool)  # open requests
+            tiers, promotion, last_write = None, None, None
+        self.ctx = PipelineContext(
+            state=state,
+            pool_cfg=pool_cfg,
+            cfg=cfg,
+            mesh=mesh,
+            topology=pool_cfg.topology,  # None -> uniform (all links equal)
+            scheduler=make_scheduler(scheduler, n_blocks=state.n_blocks),
+            table=table,
+            free=free,
+            migrating=np.zeros(state.n_blocks, dtype=bool),  # open requests
+            tiers=tiers,
+            promotion=promotion,
+            last_write=last_write,
+        )
+        # Stage wiring (construction order follows the data flow).
+        self._accounting = AccountingStage(self.ctx)
+        self._routing = RoutingStage(self.ctx)
+        self._admission = AdmissionStage(self.ctx, self._routing, self._accounting)
+        self._budget = BudgetStage(self.ctx)
+        self._verdict = VerdictStage(self.ctx, self._routing, self._accounting)
+        self._dispatch = DispatchStage(self.ctx, self._budget, self._accounting)
         self._cache_baseline = migrator.program_cache_size()
-        # Request registry: rid -> accounting record shared with LeapHandles.
-        # Holds LIVE requests only; terminal ones are pruned when their
-        # callbacks fire (handles keep their own reference).
-        self.requests: dict[int, RequestState] = {}
-        self._next_rid = 0
         self._default_session = None  # lazily built repro.api.LeapSession
+
+    # -- context views (the context is the single source of truth) ---------
+
+    @property
+    def state(self) -> LeapState:
+        return self.ctx.state
+
+    @state.setter
+    def state(self, value: LeapState) -> None:
+        self.ctx.state = value
+
+    @property
+    def pool_cfg(self) -> PoolConfig:
+        return self.ctx.pool_cfg
+
+    @property
+    def cfg(self) -> LeapConfig:
+        return self.ctx.cfg
+
+    @property
+    def mesh(self):
+        return self.ctx.mesh
+
+    @property
+    def topology(self):
+        return self.ctx.topology
+
+    @property
+    def scheduler(self):
+        """The active :class:`~repro.core.pipeline.SchedulerPolicy`."""
+        return self.ctx.scheduler
+
+    @property
+    def stats(self) -> MigrationStats:
+        return self.ctx.stats
+
+    @property
+    def tiers(self):
+        return self.ctx.tiers
+
+    @property
+    def requests(self) -> dict[int, RequestState]:
+        return self.ctx.requests
 
     # -- application-facing I/O (everything mutating goes through here) ----
 
     def read(self, block_ids) -> jax.Array:
-        return leap_read(self.state, jax.numpy.asarray(block_ids))
+        return leap_read(self.ctx.state, jax.numpy.asarray(block_ids))
 
     def write(self, block_ids, values) -> None:
-        self._note_writes(block_ids)
-        self.state = leap_write(self.state, jax.numpy.asarray(block_ids), values)
+        self.ctx.note_writes(block_ids)
+        self.ctx.state = leap_write(self.ctx.state, jax.numpy.asarray(block_ids), values)
 
     def write_rows(self, block_ids, row_offsets, rows) -> None:
-        self._note_writes(block_ids)
-        self.state = leap_write_rows(
-            self.state,
+        self.ctx.note_writes(block_ids)
+        self.ctx.state = leap_write_rows(
+            self.ctx.state,
             jax.numpy.asarray(block_ids),
             jax.numpy.asarray(row_offsets),
             rows,
         )
-
-    def _note_writes(self, block_ids) -> None:
-        """Stamp write recency (promotion coldness gate on the tiered pool)."""
-        if self.tiers is not None:
-            self._last_write[np.asarray(block_ids)] = self.stats.ticks
 
     # -- migration API ------------------------------------------------------
 
@@ -349,94 +208,40 @@ class MigrationDriver:
         dst_region: int,
         priority: int = 0,
         callbacks=(),
+        ticket: AdmissionTicket | None = None,
     ) -> RequestState:
         """Enqueue migration of ``block_ids`` to ``dst_region`` as one request.
 
-        Blocks already at the destination or already under migration are
-        skipped (duplicates within one call are deduplicated — the request
-        only accounts for blocks it actually enqueued).  On a tiered pool, a
-        request touching any member of a huge block migrates the whole block
-        as ONE huge area (the level-1 entry is the migration unit, exactly
-        like a huge page).  Higher ``priority`` requests drain strictly
-        before lower ones.  ``callbacks`` are invoked with the
-        :class:`RequestState` once every enqueued block has committed, been
-        forced, or been cancelled; a request that enqueues nothing completes
-        (and fires callbacks) immediately.
+        See :meth:`repro.core.pipeline.AdmissionStage.submit` — ``ticket``
+        overrides the scheduler policy's default admission stamp.
+        ``callbacks`` are invoked with the :class:`RequestState` once every
+        enqueued block has committed, been forced, or been cancelled; a
+        request that enqueues nothing completes (and fires) immediately.
         """
-        rid = self._next_rid
-        self._next_rid += 1
-        req = RequestState(rid=rid, dst_region=dst_region, priority=priority)
-        req.callbacks.extend(callbacks)
-        self.requests[rid] = req
-        block_ids = np.unique(np.asarray(block_ids, dtype=np.int32))
-        enqueued = 0
-        if self.tiers is not None:
-            hmask = self.tiers.is_huge(block_ids)
-            for g in np.unique(self.tiers.group_of(block_ids[hmask])):
-                enqueued += self._request_huge(int(g), dst_region, rid, priority)
-            block_ids = block_ids[~hmask]
-        mask = (self._table[block_ids, REGION] != dst_region) & ~self._migrating[
-            block_ids
-        ]
-        block_ids = block_ids[mask]
-        if len(block_ids):
-            self._migrating[block_ids] = True
-            self.stats.blocks_requested += len(block_ids)
-            # Group by current source region (areas are single-source so the
-            # ppermute backend has static endpoints).
-            srcs = self._table[block_ids, REGION]
-            for src in np.unique(srcs):
-                ids = block_ids[srcs == src]
-                self._enqueue_routed(ids, int(src), dst_region, rid, priority)
-        req.requested = enqueued + len(block_ids)
-        if req.done:
-            self._fire_callbacks(req)
-        return req
-
-    def _request_huge(self, g: int, dst_region: int, rid: int, priority: int) -> int:
-        members = self.tiers.members(g)
-        src = int(self._table[members[0], REGION])
-        if src == dst_region or self._migrating[members].any():
-            return 0
-        self._migrating[members] = True
-        self.stats.blocks_requested += len(members)
-        self._queue.append(
-            Area(members, src, dst_region, huge=True, request_id=rid, priority=priority)
+        return self._admission.submit(
+            block_ids,
+            dst_region,
+            priority=priority,
+            callbacks=callbacks,
+            ticket=ticket,
         )
-        return len(members)
 
     def cancel_request(self, rid: int) -> int:
-        """Cancel request ``rid``: drop its not-yet-opened areas immediately.
-
-        Queued areas hold no destination slots (those are reserved when an
-        epoch opens and returned before any requeue), so dropping them only
-        clears the open-request marks — ``verify_mirror()`` stays true.
-        Areas with an open epoch finish their current copy and commit
-        verdict: clean blocks still commit, dirty blocks are dropped instead
-        of requeued.  Returns the number of blocks dropped right away.
-        """
-        req = self.requests.get(rid)
-        if req is None or req.cancel_requested:
-            return 0  # unknown, already terminal (pruned), or already cancelled
-        req.cancel_requested = True
-        n = 0
-        for area in self._queue.remove_request(rid):
-            self._migrating[area.block_ids] = False
-            n += len(area)
-        if n:
-            req.cancelled += n
-            self.stats.blocks_cancelled += n
-        if req.done:
-            self._fire_callbacks(req)
-        return n
+        """Cancel request ``rid``; see :meth:`AdmissionStage.cancel`."""
+        return self._admission.cancel(rid)
 
     def request_in_flight(self, rid: int) -> bool:
         """True while any area of ``rid`` has an open epoch or pending verdict."""
-        if any(a.request_id == rid for a in self._active):
+        if any(a.request_id == rid for a in self.ctx.active):
             return True
         return any(
-            a.request_id == rid for batch in self._pending for a in batch.areas
+            a.request_id == rid for batch in self.ctx.pending for a in batch.areas
         )
+
+    def in_migration(self, block_ids) -> np.ndarray:
+        """Which of ``block_ids`` currently belong to an open request
+        (queued, copying, or awaiting a verdict).  Read-only bool copy."""
+        return self.ctx.migrating[np.asarray(block_ids, dtype=np.int64)].copy()
 
     def default_session(self):
         """The driver's default :class:`repro.api.LeapSession` (lazily built).
@@ -467,12 +272,14 @@ class MigrationDriver:
 
     @property
     def done(self) -> bool:
-        return not (self._queue or self._active or self._pending)
+        ctx = self.ctx
+        return not (ctx.queue or ctx.active or ctx.pending)
 
     @property
     def pending_blocks(self) -> int:
-        n = sum(len(a) for a in self._queue) + sum(len(a) for a in self._active)
-        n += sum(len(a) for batch in self._pending for a in batch.areas)
+        ctx = self.ctx
+        n = sum(len(a) for a in ctx.queue) + sum(len(a) for a in ctx.active)
+        n += sum(len(a) for batch in ctx.pending for a in batch.areas)
         return int(n)
 
     # -- the migration loop --------------------------------------------------
@@ -480,152 +287,30 @@ class MigrationDriver:
     def tick(self) -> None:
         """One asynchronous migration slice: spend the per-tick block budget.
 
-        A tick (i) harvests any commit verdicts that are already on the host,
-        (ii) dispatches commits for areas whose copy completed in an earlier
-        tick, (iii) advances copies of open epochs and opens new epochs.
-        With fused dispatch the whole tick is <=3 device programs; dispatches
-        are async either way — interleave application steps between ticks for
-        concurrency.
+        A tick (i) harvests any commit verdicts that are already on the host
+        (verdict stage), (ii) dispatches commits for areas whose copy
+        completed in an earlier tick, (iii) advances copies of open epochs
+        and opens new epochs within the budget stage's grants (dispatch
+        stage).  With fused dispatch the whole tick is <=3 device programs;
+        dispatches are async either way — interleave application steps
+        between ticks for concurrency.
         """
-        self.stats.ticks += 1
-        self._harvest(block=False)
-        # Commit epochs whose copy completed in an earlier tick.  Deferring the
-        # commit by one tick keeps the copy->remap window open across at least
-        # one application step, faithfully reproducing the paper's race (its
-        # footnote 1: a write can land after the copy but before the remap).
-        fused = self.cfg.fused_dispatch
-        ready = [a for a in self._active if a.copied == len(a)]
-        if fused:
-            self._dispatch_commit_batch([a for a in ready if not a.huge])
-            self._dispatch_commit_groups([a for a in ready if a.huge])
-        else:
-            for area in ready:
-                if area.huge:
-                    self._dispatch_commit_groups([area])
-                else:
-                    self._dispatch_commit(area)
-
-        budget = self.cfg.budget_blocks_per_tick
-        links = self._link_budgets()  # None -> uniform (all links equal)
-        skipped: set[int] = set()  # active areas deferred this tick (link dry)
-        opened: list[Area] = []  # epochs opened this tick (fused: batch begin)
-        forced: list[Area] = []  # escalations this tick (fused: batch force)
-        blocked: list[Area] = []  # areas whose destination is out of slots
-        congested: list[Area] = []  # queued areas whose link budget ran dry
-        plan: list[tuple[Area, np.ndarray, np.ndarray]] = []  # copy chunks
-        run_plan: list[Area] = []  # huge areas copied as whole contiguous runs
-        while budget > 0:
-            area = self._next_copyable(skipped)
-            if area is not None:
-                link = links.get((area.src_region, area.dst_region)) if links else None
-                if area.huge:
-                    # A huge block copies as ONE contiguous-run move — never
-                    # chunked, whatever the budget has left (it was admitted);
-                    # a link that cannot absorb the whole run defers it whole.
-                    # Exception: a run bigger than the link's entire per-tick
-                    # budget may monopolize an untouched link — deferring it
-                    # would starve it forever (the budget resets every tick
-                    # and never reaches the run size); sending it just
-                    # stretches that tick in the hardware model instead.
-                    need = len(area) - area.copied
-                    if link is not None and link[0] < need:
-                        if link[0] == link[2] and need > link[2]:
-                            link[0] = 0  # whole-tick monopoly of this link
-                        else:
-                            skipped.add(id(area))
-                            self.stats.deferred_congested += 1
-                            continue
-                    elif link is not None:
-                        link[0] -= need
-                    self._charge_link(area.src_region, area.dst_region, need)
-                    if fused:
-                        run_plan.append(area)
-                    else:
-                        self._dispatch_copy_runs([area])
-                    budget -= need
-                    area.copied = len(area)
-                    continue
-                per_area = len(area) - area.copied if fused else self.cfg.chunk_blocks
-                n = min(per_area, len(area) - area.copied, budget)
-                if link is not None:
-                    # Charge the copy against the link's byte budget; a dry
-                    # link defers the area's remainder to a later tick, and
-                    # the loop moves on to areas crossing other links.
-                    n = min(n, link[0])
-                    if n == 0:
-                        skipped.add(id(area))
-                        self.stats.deferred_congested += 1
-                        continue
-                    link[0] -= n
-                self._charge_link(area.src_region, area.dst_region, n)
-                ids = area.block_ids[area.copied : area.copied + n]
-                slots = area.dst_slots[area.copied : area.copied + n]
-                if fused:
-                    plan.append((area, ids, slots))
-                else:
-                    self._dispatch_copy(area, ids, slots)
-                area.copied += n
-                budget -= n
-                continue
-            if self._queue:
-                area = self._queue.popleft()
-                link = links.get((area.src_region, area.dst_region)) if links else None
-                if link is not None and (link[0] <= 0 or link[1] <= 0):
-                    # Opening an epoch on a saturated link would only stretch
-                    # the copy→commit race window; hold the area aside and
-                    # keep scheduling traffic that crosses other links.
-                    congested.append(area)
-                    self.stats.deferred_congested += 1
-                    continue
-                if not self._open_epoch(area, opened, forced):
-                    # Destination out of slots.  A relayed first hop falls
-                    # back to the direct link (stalling behind a full relay
-                    # region would trade congestion for a livelock); anything
-                    # else is set aside (it goes back to the head of its
-                    # priority class below) while we keep trying lower-
-                    # priority areas: one of THEIR commits may be what frees
-                    # the blocked destination — breaking here would let a
-                    # high-priority request to a full region starve the very
-                    # migrations that could unblock it (livelock).
-                    if area.final_dst >= 0 and area.final_dst != area.dst_region:
-                        area.dst_region = area.final_dst
-                        area.final_dst = -1
-                        self._queue.appendleft(area)
-                    else:
-                        blocked.append(area)
-                    continue
-                if link is not None and self._active and self._active[-1] is area:
-                    # Charge the per-link epoch-open budget only for a real
-                    # open: the out-of-slots halving path requeues without
-                    # opening, and forced escalations are budget-exempt.
-                    link[1] -= 1
-                continue
-            break
-        for area in reversed(congested):
-            self._queue.appendleft(area)
-        for area in reversed(blocked):
-            self._queue.appendleft(area)
-        if fused:
-            # Device order matters: begin before copy (epoch flags gate dirty
-            # tracking), force before copy (a forced block's freed source slot
-            # may already be reallocated as a copy destination this tick).
-            self._dispatch_begin_batch(opened)
-            self._dispatch_force_batch(forced)
-            self._dispatch_copy_batch(plan)
-            self._dispatch_copy_runs(run_plan)
-        if self.cfg.promote_per_tick and self.tiers is not None:
-            for g in self.promote_candidates(self.cfg.promote_per_tick):
+        ctx = self.ctx
+        ctx.stats.ticks += 1
+        self._verdict.harvest(block=False)
+        self._dispatch.commit_ready()
+        self._dispatch.run_tick(self._budget.open_tick())
+        if ctx.cfg.promote_per_tick and ctx.tiers is not None:
+            for g in self.promote_candidates(ctx.cfg.promote_per_tick):
                 self.promote_group(g)
-        self.stats.jit_cache_misses = (
-            migrator.program_cache_size() - self._cache_baseline
-        )
+        ctx.stats.jit_cache_misses = migrator.program_cache_size() - self._cache_baseline
 
     def poll(self, block: bool = False) -> None:
         """Harvest commit verdicts: opportunistically, or blocking until all
         pending verdicts are on the host (``block=True``).  Public so the
         session layer can drive the migration loop without driver privates.
         """
-        self._harvest(block=block)
+        self._verdict.harvest(block=block)
 
     def drain(self, max_ticks: int = 100_000) -> bool:
         """Deprecated shim over ``default_session().drain(...)``.
@@ -643,659 +328,41 @@ class MigrationDriver:
         )
         return self.default_session().drain(max_ticks)
 
-    # -- internals ------------------------------------------------------------
-
-    def _next_copyable(self, skipped: set | None = None) -> Area | None:
-        for a in self._active:
-            if a.copied < len(a) and (skipped is None or id(a) not in skipped):
-                return a
-        return None
-
-    def _alloc(self, region: int, n: int) -> np.ndarray | None:
-        return self._free[region].take(n)
-
-    # -- topology-aware scheduling helpers -------------------------------------
-
-    def _initial_area_blocks(self, src: int, dst: int) -> int:
-        """Initial area size for one link: full size on the fastest link,
-        shrunk proportionally on slower ones (adaptive.py rationale)."""
-        topo = self.topology
-        if topo is None or src == dst:
-            return self.cfg.initial_area_blocks
-        return area_blocks_for_distance(
-            self.cfg.initial_area_blocks,
-            topo.link_cost(src, dst),
-            topo.min_link_distance,
-            self.cfg.min_area_blocks,
-        )
-
-    def _enqueue_routed(
-        self, ids: np.ndarray, src: int, dst_region: int, rid: int, priority: int
-    ) -> None:
-        """Queue areas for ``ids`` on route src -> dst, possibly via a relay.
-
-        With a topology and ``multi_hop``, a link whose distance exceeds some
-        two-hop alternative is routed around: the first hop targets the relay
-        region with ``final_dst`` pointing at the true destination; the relay
-        commit re-enqueues the second (always direct) hop.
-        """
-        first_dst, final = dst_region, -1
-        if self.topology is not None and self.cfg.multi_hop:
-            route = self.topology.route(src, dst_region)
-            if len(route) == 3:
-                first_dst, final = route[1], dst_region
-        areas = decompose_request(
-            ids,
-            src,
-            first_dst,
-            self._initial_area_blocks(src, first_dst),
-            request_id=rid,
-            priority=priority,
-            final_dst=final,
-        )
-        if final >= 0:
-            self.stats.multi_hop_areas += len(areas)
-        self._queue.extend(areas)
-
-    def _charge_link(self, src: int, dst: int, n_blocks: int) -> None:
-        """Account copy traffic to its (src, dst) link (stats only; the
-        per-tick budget dicts are charged separately by the tick loop)."""
-        key = (int(src), int(dst))
-        self.stats.bytes_per_link[key] = self.stats.bytes_per_link.get(
-            key, 0
-        ) + n_blocks * self.pool_cfg.block_bytes
-
-    def _link_budgets(self) -> dict | None:
-        """Fresh per-tick ``(src, dst) -> [blocks_left, opens_left, cap]``
-        budget map (cap = the untouched per-tick block budget, so the huge
-        path can recognize a link nothing else used this tick), or None when
-        link scheduling is off (no topology / disabled)."""
-        topo = self.topology
-        if topo is None or not self.cfg.link_schedule:
-            return None
-        unit = self.cfg.link_blocks_per_tick
-        if unit is None:
-            unit = self.cfg.budget_blocks_per_tick
-        budgets: dict[tuple[int, int], list[int]] = {}
-        n = self.pool_cfg.n_regions
-        for s in range(n):
-            for d in range(n):
-                if s != d:
-                    cap = topo.link_blocks(s, d, unit)
-                    budgets[(s, d)] = [cap, int(topo.concurrency[s, d]), cap]
-        return budgets
-
-    def _open_epoch(self, area: Area, opened: list[Area], forced: list[Area]) -> bool:
-        if area.huge:
-            return self._open_epoch_huge(area, opened)
-        if (
-            area.attempts >= self.cfg.max_attempts_before_force
-            and area.final_dst >= 0
-            and area.final_dst != area.dst_region
-        ):
-            # Escalation overrides routing: the atomic force program has no
-            # race window for the relay to shrink, so the second copy would
-            # be pure waste — and a force to the relay could share a batched
-            # force program with its own re-queued second hop (duplicate
-            # scatter lanes, undefined table order).  Force straight to the
-            # final destination instead.
-            area.dst_region = area.final_dst
-            area.final_dst = -1
-        slots = self._alloc(area.dst_region, len(area))
-        if slots is None:
-            # Not enough pooled slots for the whole area right now.  If the
-            # destination has *some* space, split and make progress with the
-            # smaller half; otherwise wait for commits to free slots.
-            if len(area) > 1 and len(self._free[area.dst_region]) > 0:
-                mid = len(area) // 2
-                a = Area(area.block_ids[:mid], area.src_region, area.dst_region,
-                         area.attempts, request_id=area.request_id,
-                         priority=area.priority, final_dst=area.final_dst)
-                b = Area(area.block_ids[mid:], area.src_region, area.dst_region,
-                         area.attempts, request_id=area.request_id,
-                         priority=area.priority, final_dst=area.final_dst)
-                self._queue.appendleft(b)
-                self._queue.appendleft(a)
-                return True
-            return False  # caller re-queues (tick sets it aside, tries others)
-        area.dst_slots = slots
-        area.copied = 0
-        if area.attempts >= self.cfg.max_attempts_before_force:
-            # Write-through escalation: fused copy+flip, cannot be dirtied.
-            # Deliberately exempt from the per-link budgets (escalation must
-            # terminate), but its traffic is still accounted to the link.
-            # (Never a relay hop here — escalation converted it to direct
-            # above — so the per-block count is exact, not doubled.)
-            self.stats.bytes_copied += len(area) * self.pool_cfg.block_bytes
-            self.stats.blocks_forced += len(area)
-            self._charge_link(area.src_region, area.dst_region, len(area))
-            if self.cfg.fused_dispatch:
-                forced.append(area)  # device dispatch batched at end of tick
-            else:
-                self.state = migrator.force_migrate(
-                    self.state,
-                    jax.numpy.asarray(area.block_ids),
-                    jax.numpy.asarray(area.dst_slots),
-                    int(area.dst_region),
-                )
-                self.stats.dispatches += 1
-            self._finalize_success(area)
-            return True
-        if self.cfg.fused_dispatch:
-            opened.append(area)  # begin batched at end of tick, before copies
-        else:
-            self.state = migrator.begin_area(
-                self.state, jax.numpy.asarray(area.block_ids)
-            )
-            self.stats.dispatches += 1
-        self._active.append(area)
-        return True
-
-    def _open_epoch_huge(self, area: Area, opened: list[Area]) -> bool:
-        """Open a huge area's epoch: reserve one aligned run at the destination.
-
-        If the destination has >= G free slots but no contiguous run
-        (fragmentation), or the pipeline is empty and can never free one, the
-        huge block demotes and retries at small granularity — the second half
-        of the paper's §4.2 rule.
-        """
-        g = int(area.block_ids[0]) // self.pool_cfg.huge_factor
-        start = self._free[area.dst_region].take_run()
-        if start is None:
-            fragmented = len(self._free[area.dst_region]) >= self.pool_cfg.huge_factor
-            stalled = not self._active and not self._pending
-            if fragmented or stalled:
-                self._demote_group(g)
-                self._queue.extend(
-                    demote_area(area, self.cfg.reduction_factor, self.cfg.min_area_blocks)
-                )
-                return True
-            return False  # caller re-queues (tick sets it aside, tries others)
-        area.dst_slots = start + np.arange(self.pool_cfg.huge_factor, dtype=np.int32)
-        area.copied = 0
-        if self.cfg.fused_dispatch:
-            opened.append(area)  # members share the tick's begin batch
-        else:
-            self.state = migrator.begin_area(
-                self.state, jax.numpy.asarray(area.block_ids)
-            )
-            self.stats.dispatches += 1
-        self._active.append(area)
-        return True
-
-    # -- batched dispatch (fused path) ----------------------------------------
-
-    def _pad(self, *arrays: np.ndarray) -> tuple[np.ndarray, ...]:
-        return pad_to_bucket(
-            bucket_size(len(arrays[0]), self.cfg.bucket_growth), *arrays
-        )
-
-    def _dispatch_begin_batch(self, opened: list[Area]) -> None:
-        if not opened:
-            return
-        (ids,) = self._pad(np.concatenate([a.block_ids for a in opened]))
-        self.state = migrator.begin_areas(self.state, jax.numpy.asarray(ids))
-        self.stats.dispatches += 1
-
-    def _dispatch_force_batch(self, forced: list[Area]) -> None:
-        if not forced:
-            return
-        ids = np.concatenate([a.block_ids for a in forced])
-        regions = np.concatenate(
-            [np.full(len(a), a.dst_region, np.int32) for a in forced]
-        )
-        slots = np.concatenate([a.dst_slots for a in forced])
-        ids, regions, slots = self._pad(ids, regions, slots)
-        self.state = migrator.force_areas(
-            self.state,
-            jax.numpy.asarray(ids),
-            jax.numpy.asarray(regions),
-            jax.numpy.asarray(slots),
-        )
-        self.stats.dispatches += 1
-
-    def _dispatch_copy_batch(
-        self, plan: list[tuple[Area, np.ndarray, np.ndarray]]
-    ) -> None:
-        if not plan:
-            return
-        n_blocks = sum(len(ids) for _, ids, _ in plan)
-        self.stats.bytes_copied += n_blocks * self.pool_cfg.block_bytes
-        if self.cfg.backend == "ppermute":
-            self._dispatch_copy_batch_ppermute(plan)
-            return
-        s_per = self.pool_cfg.slots_per_region
-        ids = np.concatenate([ids for _, ids, _ in plan])
-        dst_regions = np.concatenate(
-            [np.full(len(c), a.dst_region, np.int32) for a, c, _ in plan]
-        )
-        dst_slots = np.concatenate([slots for _, _, slots in plan])
-        # Flat slot ids from the exact host mirror: table entries of in-flight
-        # blocks cannot change until their commit, which this driver issues.
-        src_flat = self._table[ids, REGION] * s_per + self._table[ids, SLOT]
-        dst_flat = dst_regions * s_per + dst_slots
-        src_flat, dst_flat = self._pad(src_flat, dst_flat)
-        self.state = migrator.fused_copy(
-            self.state,
-            jax.numpy.asarray(src_flat),
-            jax.numpy.asarray(dst_flat),
-            impl=self.cfg.copy_impl,
-        )
-        self.stats.dispatches += 1
-
-    def _dispatch_copy_batch_ppermute(
-        self, plan: list[tuple[Area, np.ndarray, np.ndarray]]
-    ) -> None:
-        if self.mesh is None or self.cfg.axis_name is None:
-            raise ValueError("ppermute backend requires mesh and axis_name")
-        # One point-to-point program per (src, dst) region pair this tick;
-        # areas are single-source so chunks group cleanly.
-        pairs: dict[tuple[int, int], list[tuple[np.ndarray, np.ndarray]]] = {}
-        for area, ids, slots in plan:
-            pairs.setdefault((area.src_region, area.dst_region), []).append(
-                (self._table[ids, SLOT], slots)
-            )
-        for (src, dst), chunks in pairs.items():
-            src_slots = np.concatenate([c[0] for c in chunks])
-            dst_slots = np.concatenate([c[1] for c in chunks])
-            src_slots, dst_slots = self._pad(src_slots, dst_slots)
-            self.state = migrator.fused_copy_ppermute(
-                self.state,
-                jax.numpy.asarray(src_slots),
-                jax.numpy.asarray(dst_slots),
-                int(src),
-                int(dst),
-                self.cfg.axis_name,
-                self.mesh,
-                impl=self.cfg.copy_impl,
-            )
-            self.stats.dispatches += 1
-
-    def _dispatch_commit_batch(self, ready: list[Area]) -> None:
-        if not ready:
-            return
-        ids = np.concatenate([a.block_ids for a in ready])
-        regions = np.concatenate(
-            [np.full(len(a), a.dst_region, np.int32) for a in ready]
-        )
-        slots = np.concatenate([a.dst_slots for a in ready])
-        offsets = np.cumsum([0] + [len(a) for a in ready])
-        p_ids, p_regions, p_slots = self._pad(ids, regions, slots)
-        self.state, verdict = migrator.commit_areas(
-            self.state,
-            jax.numpy.asarray(p_ids),
-            jax.numpy.asarray(p_regions),
-            jax.numpy.asarray(p_slots),
-        )
-        self.stats.dispatches += 1
-        for a in ready:
-            self._active.remove(a)
-        self._pending.append(_CommitBatch(ready, offsets, verdict))
-
-    # -- huge-tier dispatch (contiguous runs + grouped commits) ----------------
-
-    def _dispatch_copy_runs(self, run_plan: list[Area]) -> None:
-        """One device program copies every huge block scheduled this tick —
-        each as a single contiguous-run move, not G per-slot gathers."""
-        if not run_plan:
-            return
-        G = self.pool_cfg.huge_factor
-        s_per = self.pool_cfg.slots_per_region
-        nbytes = len(run_plan) * G * self.pool_cfg.block_bytes
-        self.stats.bytes_copied += nbytes
-        self.stats.bytes_copied_huge += nbytes
-        firsts = np.asarray([a.block_ids[0] for a in run_plan])
-        src = (self._table[firsts, REGION] * s_per + self._table[firsts, SLOT]).astype(
-            np.int32
-        )
-        dst = np.asarray(
-            [a.dst_region * s_per + a.dst_slots[0] for a in run_plan], np.int32
-        )
-        src, dst = self._pad(src, dst)
-        self.state = migrator.fused_copy_runs(
-            self.state,
-            jax.numpy.asarray(src),
-            jax.numpy.asarray(dst),
-            run=G,
-            impl=self.cfg.copy_impl,
-        )
-        self.stats.dispatches += 1
-
-    def _dispatch_commit_groups(self, ready: list[Area]) -> None:
-        """All-or-nothing commit of every copy-complete huge area (one program,
-        one verdict lane per huge block)."""
-        if not ready:
-            return
-        G = self.pool_cfg.huge_factor
-        k = len(ready)
-        bucket = bucket_size(k, self.cfg.bucket_growth)
-        members = np.concatenate([a.block_ids for a in ready]).reshape(k, G)
-        regions = np.asarray([a.dst_region for a in ready], np.int32)
-        starts = np.asarray([a.dst_slots[0] for a in ready], np.int32)
-        # pad by replicating lane-0's whole GROUP (idempotent duplicate remap)
-        members = np.concatenate([members, np.repeat(members[:1], bucket - k, axis=0)])
-        regions, starts = pad_to_bucket(bucket, regions, starts)
-        self.state, verdict = migrator.commit_groups(
-            self.state,
-            jax.numpy.asarray(members.reshape(-1)),
-            jax.numpy.asarray(regions),
-            jax.numpy.asarray(starts),
-            group=G,
-        )
-        self.stats.dispatches += 1
-        for a in ready:
-            self._active.remove(a)
-        self._pending.append(
-            _CommitBatch(ready, np.arange(k + 1), verdict)  # 1 lane per area
-        )
-
-    # -- legacy per-area dispatch (fused_dispatch=False baseline) -------------
-
-    def _dispatch_copy(self, area: Area, ids: np.ndarray, slots: np.ndarray) -> None:
-        if self.cfg.backend == "ppermute":
-            if self.mesh is None or self.cfg.axis_name is None:
-                raise ValueError("ppermute backend requires mesh and axis_name")
-            self.state = migrator.copy_chunk_ppermute(
-                self.state,
-                jax.numpy.asarray(ids),
-                jax.numpy.asarray(slots),
-                int(area.src_region),
-                int(area.dst_region),
-                self.cfg.axis_name,
-                self.mesh,
-            )
-        else:
-            self.state = migrator.copy_chunk(
-                self.state,
-                jax.numpy.asarray(ids),
-                jax.numpy.asarray(slots),
-                int(area.dst_region),
-            )
-        self.stats.dispatches += 1
-        self.stats.bytes_copied += len(ids) * self.pool_cfg.block_bytes
-
-    def _dispatch_commit(self, area: Area) -> None:
-        self.state, verdict = migrator.commit_area(
-            self.state,
-            jax.numpy.asarray(area.block_ids),
-            jax.numpy.asarray(area.dst_slots),
-            int(area.dst_region),
-        )
-        self.stats.dispatches += 1
-        self._active.remove(area)
-        self._pending.append(
-            _CommitBatch([area], np.asarray([0, len(area)]), verdict)
-        )
-
-    # -- verdict processing ---------------------------------------------------
-
-    def _harvest(self, block: bool) -> None:
-        still = []
-        for batch in self._pending:
-            ready = block
-            if not ready:
-                try:
-                    ready = batch.verdict.is_ready()
-                except AttributeError:  # pragma: no cover - older jax
-                    ready = True
-            if not ready:
-                still.append(batch)
-                continue
-            packed = np.asarray(batch.verdict)
-            for area, start, end in zip(batch.areas, batch.offsets, batch.offsets[1:]):
-                self._process_verdict(area, packed[start:end])
-        self._pending = still
-
-    def _process_verdict(self, area: Area, dirty: np.ndarray) -> None:
-        if area.huge:
-            self._process_verdict_huge(area, bool(dirty[0]))
-            return
-        clean = ~dirty
-        # Clean blocks: the remap took effect on device; mirror it.
-        clean_ids = area.block_ids[clean]
-        self._remap_host(clean_ids, area.dst_region, area.dst_slots[clean])
-        if area.final_dst >= 0 and area.final_dst != area.dst_region:
-            # Relay hop committed: the blocks now sit at the intermediate
-            # region; queue the (direct) second hop.  The request is only
-            # credited when they arrive at the final destination.
-            self._relay_onward(area, clean_ids)
-        else:
-            self.stats.blocks_migrated += int(clean.sum())
-            self._credit(area, committed=int(clean.sum()))
-        # Dirty blocks: stale copies; free reserved slots and requeue smaller —
-        # unless the owning request was cancelled, in which case the in-flight
-        # epoch ends here: drop the dirty remainder instead of retrying.
-        n_dirty = int(dirty.sum())
-        if n_dirty:
-            self.stats.dirty_rejections += n_dirty
-            self._free[area.dst_region].put(area.dst_slots[dirty])
-            if self._cancelled(area):
-                self._drop_blocks(area, area.block_ids[dirty])
-                return
-            subs = split_area(area, dirty, self.cfg.reduction_factor, self.cfg.min_area_blocks)
-            self.stats.splits += max(0, len(subs) - 1)
-            self._queue.extend(subs)
-
-    def _process_verdict_huge(self, area: Area, is_dirty: bool) -> None:
-        """Huge commits are all-or-nothing: remap the run, or retry/demote."""
-        G = self.pool_cfg.huge_factor
-        g = int(area.block_ids[0]) // G
-        if not is_dirty:
-            ids = area.block_ids
-            old_region = int(self._table[ids[0], REGION])
-            old_start = int(self._table[ids[0], SLOT])
-            self._free[old_region].free_run(old_start)
-            self._table[ids, REGION] = area.dst_region
-            self._table[ids, SLOT] = area.dst_slots
-            self._migrating[ids] = False
-            self.tiers.relocate(g, area.dst_region, int(area.dst_slots[0]))
-            self.stats.blocks_migrated += G
-            self.stats.huge_areas_committed += 1
-            self._credit(area, committed=G)
-            return
-        # Rejected: a member was written during the run's copy epoch.  Free
-        # the reserved destination run and either retry the run whole or —
-        # after demote_after_attempts rejections (sustained write pressure) —
-        # split the huge block and retry at small granularity (paper §4.2).
-        self.stats.dirty_rejections += G
-        self._free[area.dst_region].free_run(int(area.dst_slots[0]))
-        area.attempts += 1
-        area.dst_slots = None
-        if self._cancelled(area):
-            self._drop_blocks(area, area.block_ids)
-            return
-        if area.attempts >= self.cfg.demote_after_attempts:
-            self._demote_group(g)
-            subs = demote_area(area, self.cfg.reduction_factor, self.cfg.min_area_blocks)
-            self.stats.splits += max(0, len(subs) - 1)
-            self._queue.extend(subs)
-        else:
-            self._queue.append(area)
-
-    def _demote_group(self, g: int) -> None:
-        """Split a huge block into G small blocks (host metadata; bytes stay)."""
-        region, start = (int(x) for x in self.tiers.huge_loc[g])
-        self._free[region].split_allocated(start)
-        self.tiers.demote(g)
-        self.stats.demotions += 1
-
-    def _finalize_success(self, area: Area) -> None:
-        # Force path: all blocks flipped on device; mirror and free sources.
-        # Never a relay hop (escalation forces direct to the final
-        # destination), so the credit is always terminal.
-        self._remap_host(area.block_ids, area.dst_region, area.dst_slots)
-        self._credit(area, forced=len(area))
-
-    def _relay_onward(self, area: Area, ids: np.ndarray) -> None:
-        """Second hop of a relayed area: blocks that just arrived at the
-        intermediate region continue — always direct, never re-relayed, so a
-        route is at most two hops — to the final destination.  Attempts carry
-        over: a first hop under write pressure keeps its escalation credit.
-        """
-        if len(ids) == 0:
-            return
-        if self._cancelled(area):
-            self._drop_blocks(area, ids)
-            return
-        self._migrating[ids] = True
-        subs = decompose_request(
-            ids,
-            area.dst_region,
-            area.final_dst,
-            self._initial_area_blocks(area.dst_region, area.final_dst),
-            request_id=area.request_id,
-            priority=area.priority,
-        )
-        for sub in subs:
-            sub.attempts = area.attempts
-        self._queue.extend(subs)
-
-    # -- per-request accounting ------------------------------------------------
-
-    def _credit(self, area: Area, committed: int = 0, forced: int = 0) -> None:
-        req = self.requests.get(area.request_id)
-        if req is None:
-            return
-        req.committed += committed
-        req.forced += forced
-        if req.done:
-            self._fire_callbacks(req)
-
-    def _cancelled(self, area: Area) -> bool:
-        req = self.requests.get(area.request_id)
-        return req is not None and req.cancel_requested
-
-    def _drop_blocks(self, area: Area, ids: np.ndarray) -> None:
-        """Abandon blocks of a cancelled request mid-flight: their reserved
-        destination slots are already returned by the caller; clear the open
-        marks and account them as cancelled."""
-        self._migrating[ids] = False
-        self.stats.blocks_cancelled += len(ids)
-        req = self.requests.get(area.request_id)
-        if req is None:
-            return
-        req.cancelled += len(ids)
-        if req.done:
-            self._fire_callbacks(req)
-
-    def _fire_callbacks(self, req: RequestState) -> None:
-        # The request is terminal: fire callbacks and prune it from the
-        # registry so a long-running server does not accumulate one record
-        # per request forever.  Handles keep working — they hold the
-        # RequestState object itself, not the registry entry.
-        callbacks, req.callbacks = list(req.callbacks), []
-        for cb in callbacks:
-            cb(req)
-        self.requests.pop(req.rid, None)
-
-    def _remap_host(self, ids: np.ndarray, dst_region: int, dst_slots: np.ndarray) -> None:
-        """Mirror a device remap: free old sources, point ids at (dst, slots)."""
-        if len(ids) == 0:
-            return
-        old = self._table[ids].copy()
-        for r in np.unique(old[:, REGION]):
-            self._free[r].put(old[old[:, REGION] == r, SLOT])
-        self._table[ids, REGION] = dst_region
-        self._table[ids, SLOT] = dst_slots
-        self._migrating[ids] = False
-
-    # -- tier transitions (two-tier pool) --------------------------------------
+    # -- tier transitions (two-tier pool; dispatch-stage compaction) ---------
 
     def promote_candidates(self, limit: int | None = None) -> list[int]:
         """Groups currently eligible for promotion (aligned, resident, cold)."""
-        if self.tiers is None:
-            return []
-        out = self._policy.candidates(
-            self.tiers, self._table, self._migrating, self._last_write, self.stats.ticks
-        )
-        return out[:limit] if limit is not None else out
+        return self._dispatch.promote_candidates(limit)
 
     def promote_group(self, g: int) -> bool:
-        """Coalesce group ``g``'s G small blocks into one huge block.
-
-        Requires the policy's aligned/fully-resident/cold checks and a free
-        run in the group's region; the compaction copy+remap goes through the
-        atomic force program, so no epoch (and no race window) is needed.
-        Returns False (no state change) when ineligible or out of runs.
-        """
-        if self.tiers is None:
-            return False
-        if not self._policy.eligible(
-            g, self.tiers, self._table, self._migrating, self._last_write, self.stats.ticks
-        ):
-            return False
-        members = self.tiers.members(g)
-        region = int(self._table[members[0], REGION])
-        start = self._free[region].take_run()
-        if start is None:
-            return False
-        G = self.pool_cfg.huge_factor
-        dst_slots = start + np.arange(G, dtype=np.int32)
-        self.state = migrator.force_areas(
-            self.state,
-            jax.numpy.asarray(members),
-            jax.numpy.asarray(np.full(G, region, np.int32)),
-            jax.numpy.asarray(dst_slots),
-        )
-        self.stats.dispatches += 1
-        self.stats.bytes_copied += G * self.pool_cfg.block_bytes
-        # take_run left the destination live as one huge allocation; the old
-        # scattered member slots free individually and coalesce.
-        self._free[region].put(self._table[members, SLOT])
-        self._table[members, SLOT] = dst_slots
-        self.tiers.promote(g, region, start)
-        self.stats.promotions += 1
-        return True
+        """Coalesce group ``g``'s G small blocks into one huge block."""
+        return self._dispatch.promote_group(g)
 
     def adopt_huge(self, group_ids) -> int:
-        """Zero-copy promotion of groups whose members already sit on aligned
-        contiguous runs (e.g. straight out of ``init_state``'s dense
-        placement).  Pure host metadata; returns the number adopted.
-        """
-        if self.tiers is None:
-            return 0
-        G = self.pool_cfg.huge_factor
-        adopted = 0
-        for g in np.asarray(group_ids, dtype=np.int64):
-            g = int(g)
-            members = self.tiers.members(g)
-            if self.tiers.tier[g] or self._migrating[members].any():
-                continue
-            region = self._table[members, REGION]
-            start = int(self._table[members[0], SLOT])
-            contiguous = (
-                (region == region[0]).all()
-                and start % G == 0
-                and (self._table[members, SLOT] == start + np.arange(G)).all()
-            )
-            if not contiguous:
-                continue
-            self._free[int(region[0])].merge_allocated(start)
-            self.tiers.promote(g, int(region[0]), start)
-            adopted += 1
-        return adopted
+        """Zero-copy promotion of already-aligned resident runs."""
+        return self._dispatch.adopt_huge(group_ids)
 
     # -- introspection ---------------------------------------------------------
 
     def host_placement(self) -> np.ndarray:
-        return self._table[:, REGION].copy()
+        return self.ctx.table[:, REGION].copy()
 
     def host_table(self) -> np.ndarray:
         """Copy of the exact host table mirror ``[n_blocks, (region, slot)]``."""
-        return self._table.copy()
+        return self.ctx.table.copy()
 
     def regions_of(self, block_ids) -> np.ndarray:
         """Current regions of just ``block_ids`` (fancy-indexed copy — O(k),
         not a full-table copy; the facade's hot-path accessor)."""
-        return self._table[np.asarray(block_ids, dtype=np.int64), REGION]
+        return self.ctx.table[np.asarray(block_ids, dtype=np.int64), REGION]
 
     def slots_of(self, block_ids) -> np.ndarray:
         """Current slots of just ``block_ids`` (fancy-indexed copy)."""
-        return self._table[np.asarray(block_ids, dtype=np.int64), SLOT]
+        return self.ctx.table[np.asarray(block_ids, dtype=np.int64), SLOT]
 
     def free_slots(self, region: int) -> int:
         """Number of free pooled slots on ``region`` right now."""
-        return len(self._free[region])
+        return len(self.ctx.free[region])
 
     def debug_free_list(self, region: int):
         """The region's live allocator (FreeList or BuddyAllocator).
@@ -1304,18 +371,18 @@ class MigrationDriver:
         baselines only (e.g. to fabricate fragmentation).  Everything else
         should go through :meth:`free_slots` / the read-only facade.
         """
-        return self._free[region]
+        return self.ctx.free[region]
 
     def verify_mirror(self) -> bool:
         """Debug: host table mirror must match device table exactly."""
-        return bool(np.array_equal(self._table, np.asarray(self.state.table)))
+        return bool(np.array_equal(self.ctx.table, np.asarray(self.ctx.state.table)))
 
     def verify_tiers(self) -> bool:
         """Debug: level-1 table consistent with the flat mirror, and every
         region's buddy allocator satisfies its invariants."""
-        if self.tiers is None:
+        if self.ctx.tiers is None:
             return True
-        self.tiers.check_consistent(self._table)
-        for f in self._free:
+        self.ctx.tiers.check_consistent(self.ctx.table)
+        for f in self.ctx.free:
             f.check()
         return True

@@ -360,11 +360,25 @@ def fused_copy_ppermute(
     return dataclasses.replace(state, pool=pool)
 
 
+@partial(jax.jit, donate_argnames=("state",), static_argnames=("dst_region",))
+def zero_fill(state: LeapState, slots: jax.Array, dst_region: int) -> LeapState:
+    """Zero destination slots before a copy lands (page-fault analogue).
+
+    The move_pages()/autonuma-style schedulers migrate into *freshly
+    allocated* memory, which the kernel zero-fills on first touch; issuing
+    this as its own program keeps XLA from eliding the dead store, so the
+    extra pass is actually paid (Fig. 2 accounting).
+    """
+    pool = state.pool.at[dst_region, slots].set(0)
+    return dataclasses.replace(state, pool=pool)
+
+
 # --------------------------------------------------------------------------
 # Compile-cache introspection (control-path cost accounting)
 # --------------------------------------------------------------------------
 
 _PROGRAMS = {
+    "zero_fill": zero_fill,
     "begin_area": begin_area,
     "copy_chunk": copy_chunk,
     "copy_chunk_ppermute": copy_chunk_ppermute,

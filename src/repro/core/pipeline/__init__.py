@@ -1,0 +1,56 @@
+"""The staged migration pipeline behind :class:`repro.core.MigrationDriver`.
+
+The paper's `page_leap()` is a sequence of distinct mechanisms; each lives
+in its own stage here, composed by the thin driver:
+
+  admission   request decomposition, dedup, huge grouping, cancellation
+  routing     topology routes, two-hop relays, link-scaled area sizing
+  budget      per-tick block budget, per-link byte/dispatch budgets,
+              congestion deferral
+  dispatch    epoch opens + shape-bucketed begin/copy/force/commit batching
+  verdict     dirty handling, adaptive splits, huge demotion, relay
+              re-enqueue
+  accounting  per-request credit, completion callbacks, cancel accounting
+
+All stages share one :class:`PipelineContext` (device state, exact host
+mirrors, queues, request registry).  The :class:`SchedulerPolicy` protocol
+is the strategy seam at admission/budget: the paper's baselines
+(move_pages()-style sync, autonuma-style sampling) are configurations of
+this one engine — see ``scheduler.py`` and DESIGN.md §8.
+"""
+
+from repro.core.pipeline.accounting import AccountingStage
+from repro.core.pipeline.admission import AdmissionStage, busy_mask
+from repro.core.pipeline.budget import BudgetStage, TickBudget
+from repro.core.pipeline.context import PipelineContext
+from repro.core.pipeline.dispatch import DispatchStage
+from repro.core.pipeline.routing import RoutingStage
+from repro.core.pipeline.scheduler import (
+    AdmissionTicket,
+    LeapScheduler,
+    SamplingConfig,
+    SamplingScheduler,
+    SchedulerPolicy,
+    SyncScheduler,
+    make_scheduler,
+)
+from repro.core.pipeline.verdict import VerdictStage
+
+__all__ = [
+    "AccountingStage",
+    "AdmissionStage",
+    "AdmissionTicket",
+    "BudgetStage",
+    "DispatchStage",
+    "LeapScheduler",
+    "PipelineContext",
+    "RoutingStage",
+    "SamplingConfig",
+    "SamplingScheduler",
+    "SchedulerPolicy",
+    "SyncScheduler",
+    "TickBudget",
+    "VerdictStage",
+    "busy_mask",
+    "make_scheduler",
+]

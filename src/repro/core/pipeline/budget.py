@@ -1,0 +1,137 @@
+"""Budget stage: per-tick pacing and per-link byte/dispatch budgets.
+
+A tick opens one :class:`TickBudget` — the scheduler-policy block budget
+plus (with a topology attached) fresh per-link budgets — and the dispatch
+stage spends it through the granting methods here.  Congestion deferral is
+a budget decision: a grant of 0 tells dispatch to set the area aside and
+keep scheduling traffic that crosses other links.  Link *accounting*
+(``stats.bytes_per_link``) also lives here and is tracked on every driver,
+topology or not, so benchmarks can model link costs post-hoc.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.adaptive import Area
+from repro.core.pipeline.context import PipelineContext
+
+
+@dataclasses.dataclass
+class TickBudget:
+    """One tick's spendable budget: global blocks + per-link [bytes, opens]."""
+
+    blocks: int  # global per-tick block budget left
+    links: dict | None  # (src, dst) -> [blocks_left, opens_left, cap], or None
+
+    def link(self, src: int, dst: int):
+        if self.links is None:
+            return None
+        return self.links.get((src, dst))
+
+
+class BudgetStage:
+    def __init__(self, ctx: PipelineContext):
+        self.ctx = ctx
+
+    # -- opening a tick ----------------------------------------------------
+
+    def open_tick(self) -> TickBudget:
+        return TickBudget(
+            blocks=self.ctx.scheduler.tick_budget(self.ctx.cfg),
+            links=self._link_budgets(),
+        )
+
+    def _link_budgets(self) -> dict | None:
+        """Fresh per-tick ``(src, dst) -> [blocks_left, opens_left, cap]``
+        budget map (cap = the untouched per-tick block budget, so the huge
+        path can recognize a link nothing else used this tick), or None when
+        link scheduling is off (no topology / disabled)."""
+        topo = self.ctx.topology
+        cfg = self.ctx.cfg
+        if topo is None or not cfg.link_schedule:
+            return None
+        unit = cfg.link_blocks_per_tick
+        if unit is None:
+            unit = cfg.budget_blocks_per_tick
+        budgets: dict[tuple[int, int], list[int]] = {}
+        n = self.ctx.pool_cfg.n_regions
+        for s in range(n):
+            for d in range(n):
+                if s != d:
+                    cap = topo.link_blocks(s, d, unit)
+                    budgets[(s, d)] = [cap, int(topo.concurrency[s, d]), cap]
+        return budgets
+
+    # -- grants (0 = congestion-defer; dispatch sets the area aside) -------
+
+    def grant_copy(self, tb: TickBudget, area: Area, want: int) -> int:
+        """Grant up to ``want`` copy blocks on the area's link; 0 = defer."""
+        link = tb.link(area.src_region, area.dst_region)
+        n = want
+        if link is not None:
+            # Charge the copy against the link's byte budget; a dry link
+            # defers the area's remainder to a later tick, and the loop
+            # moves on to areas crossing other links.
+            n = min(n, link[0])
+            if n == 0:
+                self.ctx.stats.deferred_congested += 1
+                return 0
+            link[0] -= n
+        self.charge_link(area.src_region, area.dst_region, n)
+        return n
+
+    def grant_huge(self, tb: TickBudget, area: Area, need: int) -> int:
+        """Grant a huge block's whole contiguous run, or 0 to defer it whole.
+
+        A huge block copies as ONE contiguous-run move — never chunked,
+        whatever the budget has left (it was admitted); a link that cannot
+        absorb the whole run defers it whole.  Exception: a run bigger than
+        the link's entire per-tick budget may monopolize an untouched link —
+        deferring it would starve it forever (the budget resets every tick
+        and never reaches the run size); sending it just stretches that tick
+        in the hardware model instead.
+        """
+        link = tb.link(area.src_region, area.dst_region)
+        if link is not None and link[0] < need:
+            if link[0] == link[2] and need > link[2]:
+                link[0] = 0  # whole-tick monopoly of this link
+            else:
+                self.ctx.stats.deferred_congested += 1
+                return 0
+        elif link is not None:
+            link[0] -= need
+        self.charge_link(area.src_region, area.dst_region, need)
+        return need
+
+    def may_open(self, tb: TickBudget, area: Area) -> bool:
+        """Whether the area's link can absorb a new epoch this tick.
+
+        Opening an epoch on a saturated link would only stretch the
+        copy→commit race window; the caller holds the area aside and keeps
+        scheduling traffic that crosses other links.
+        """
+        link = tb.link(area.src_region, area.dst_region)
+        if link is not None and (link[0] <= 0 or link[1] <= 0):
+            self.ctx.stats.deferred_congested += 1
+            return False
+        return True
+
+    def charge_open(self, tb: TickBudget, area: Area) -> None:
+        """Charge the per-link epoch-open budget for a real epoch open (the
+        out-of-slots halving path requeues without opening, and forced
+        escalations are budget-exempt — callers skip the charge there)."""
+        link = tb.link(area.src_region, area.dst_region)
+        if link is not None:
+            link[1] -= 1
+
+    # -- link accounting (stats only; budgets are charged above) -----------
+
+    def charge_link(self, src: int, dst: int, n_blocks: int) -> None:
+        """Account copy traffic to its (src, dst) link."""
+        key = (int(src), int(dst))
+        stats = self.ctx.stats
+        stats.bytes_per_link[key] = (
+            stats.bytes_per_link.get(key, 0)
+            + n_blocks * self.ctx.pool_cfg.block_bytes
+        )

@@ -1,0 +1,624 @@
+"""Dispatch stage: epoch opens and shape-bucketed device-program batching.
+
+Owns the per-tick scheduling loop (``run_tick``): advances copies of open
+epochs, opens new epochs off the priority queue, and batches the tick's
+work into at most three fused device programs — one ``begin_areas``, one
+``fused_copy`` (plus one contiguous-run program for huge blocks), one
+``commit_areas``/``commit_groups`` — padded to geometric buckets so the jit
+cache stays O(log n) (DESIGN.md §3).  ``fused_dispatch=False`` selects the
+legacy per-chunk/per-area dispatch path (the benchmark baseline).
+
+Budget decisions (how much a link grants, congestion deferral) come from
+the budget stage; dirty verdicts are harvested later by the verdict stage.
+Tier transitions (promotion/adoption) live here too: a promotion is just a
+compaction dispatch through the atomic force program.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import migrator
+from repro.core.adaptive import Area, bucket_size, demote_area, pad_to_bucket
+from repro.core.pipeline.accounting import AccountingStage
+from repro.core.pipeline.budget import BudgetStage, TickBudget
+from repro.core.pipeline.context import PipelineContext
+from repro.core.queues import CommitBatch
+from repro.core.state import REGION, SLOT
+
+
+class DispatchStage:
+    def __init__(
+        self,
+        ctx: PipelineContext,
+        budget: BudgetStage,
+        accounting: AccountingStage,
+    ):
+        self.ctx = ctx
+        self.budget = budget
+        self.accounting = accounting
+        # Source slots freed by this tick's forced escalations, quarantined
+        # until the tick's device batches are dispatched (see run_tick).
+        self._freed: list[np.ndarray] = []
+
+    # -- the per-tick scheduling loop --------------------------------------
+
+    def commit_ready(self) -> None:
+        """Dispatch commits for areas whose copy completed in an earlier
+        tick.  Deferring the commit by one tick keeps the copy->remap window
+        open across at least one application step, faithfully reproducing
+        the paper's race (its footnote 1: a write can land after the copy
+        but before the remap)."""
+        ctx = self.ctx
+        ready = [a for a in ctx.active if a.copied == len(a)]
+        if ctx.cfg.fused_dispatch:
+            self._dispatch_commit_batch([a for a in ready if not a.huge])
+            self._dispatch_commit_groups([a for a in ready if a.huge])
+        else:
+            for area in ready:
+                if area.huge:
+                    self._dispatch_commit_groups([area])
+                else:
+                    self._dispatch_commit(area)
+
+    def run_tick(self, tb: TickBudget) -> None:
+        """Spend the tick budget: advance open epochs, open new ones."""
+        ctx = self.ctx
+        fused = ctx.cfg.fused_dispatch
+        skipped: set[int] = set()  # active areas deferred this tick (link dry)
+        opened: list[Area] = []  # epochs opened this tick (fused: batch begin)
+        forced: list[Area] = []  # escalations this tick (fused: batch force)
+        blocked: list[Area] = []  # areas whose destination is out of slots
+        congested: list[Area] = []  # queued areas whose link budget ran dry
+        zeros: list[Area] = []  # fresh-alloc epochs (fused: batch zero-fill)
+        plan: list[tuple[Area, np.ndarray, np.ndarray]] = []  # copy chunks
+        run_plan: list[Area] = []  # huge areas copied as whole contiguous runs
+        while tb.blocks > 0:
+            area = self._next_copyable(skipped)
+            if area is not None:
+                if area.huge:
+                    need = len(area) - area.copied
+                    if self.budget.grant_huge(tb, area, need) == 0:
+                        skipped.add(id(area))
+                        continue
+                    if fused:
+                        run_plan.append(area)
+                    else:
+                        self._dispatch_copy_runs([area])
+                    tb.blocks -= need
+                    area.copied = len(area)
+                    continue
+                per_area = len(area) - area.copied if fused else ctx.cfg.chunk_blocks
+                want = min(per_area, len(area) - area.copied, tb.blocks)
+                n = self.budget.grant_copy(tb, area, want)
+                if n == 0:
+                    skipped.add(id(area))
+                    continue
+                ids = area.block_ids[area.copied : area.copied + n]
+                slots = area.dst_slots[area.copied : area.copied + n]
+                if fused:
+                    plan.append((area, ids, slots))
+                else:
+                    self._dispatch_copy(area, ids, slots)
+                area.copied += n
+                tb.blocks -= n
+                continue
+            if ctx.queue:
+                area = ctx.queue.popleft()
+                if not self.budget.may_open(tb, area):
+                    congested.append(area)
+                    continue
+                if not self._open_epoch(area, opened, forced, zeros):
+                    # Destination out of slots.  A relayed first hop falls
+                    # back to the direct link (stalling behind a full relay
+                    # region would trade congestion for a livelock); anything
+                    # else is set aside (it goes back to the head of its
+                    # priority class below) while we keep trying lower-
+                    # priority areas: one of THEIR commits may be what frees
+                    # the blocked destination — breaking here would let a
+                    # high-priority request to a full region starve the very
+                    # migrations that could unblock it (livelock).
+                    if area.final_dst >= 0 and area.final_dst != area.dst_region:
+                        area.dst_region = area.final_dst
+                        area.final_dst = -1
+                        ctx.queue.appendleft(area)
+                    else:
+                        blocked.append(area)
+                    continue
+                if ctx.active and ctx.active[-1] is area:
+                    # Charge the per-link epoch-open budget only for a real
+                    # open: the out-of-slots halving path requeues without
+                    # opening, and forced escalations are budget-exempt.
+                    self.budget.charge_open(tb, area)
+                continue
+            break
+        for area in reversed(congested):
+            ctx.queue.appendleft(area)
+        for area in reversed(blocked):
+            ctx.queue.appendleft(area)
+        if fused:
+            # Device order matters: begin before copy (epoch flags gate dirty
+            # tracking), force before copy (a forced block's freed source slot
+            # may be reallocated as a copy destination next tick), zero-fill
+            # before force AND copy (a fresh area's zero pass must land before
+            # its own force/copy overwrites the same slots with the payload).
+            # This ordering is only sound because slots freed by this tick's
+            # forces are QUARANTINED until the flush below: no open in this
+            # tick can hand a force's still-unread source slot to another
+            # area as a zero/force/copy destination.
+            self._dispatch_begin_batch(opened)
+            self._dispatch_zero_batch(zeros)
+            self._dispatch_force_batch(forced)
+            self._dispatch_copy_batch(plan)
+            self._dispatch_copy_runs(run_plan)
+        # End of tick: every program that reads a forced area's old source
+        # slots is dispatched; release them for the next tick's allocations.
+        for old in self._freed:
+            for r in np.unique(old[:, REGION]):
+                ctx.free[r].put(old[old[:, REGION] == r, SLOT])
+        self._freed = []
+
+    def _next_copyable(self, skipped: set | None = None) -> Area | None:
+        for a in self.ctx.active:
+            if a.copied < len(a) and (skipped is None or id(a) not in skipped):
+                return a
+        return None
+
+    # -- epoch open --------------------------------------------------------
+
+    def _open_epoch(
+        self,
+        area: Area,
+        opened: list[Area],
+        forced: list[Area],
+        zeros: list[Area] | None = None,
+    ) -> bool:
+        ctx = self.ctx
+        cfg = ctx.cfg
+        if area.huge:
+            return self._open_epoch_huge(area, opened)
+        if (
+            area.attempts >= cfg.max_attempts_before_force
+            and area.final_dst >= 0
+            and area.final_dst != area.dst_region
+        ):
+            # Escalation overrides routing: the atomic force program has no
+            # race window for the relay to shrink, so the second copy would
+            # be pure waste — and a force to the relay could share a batched
+            # force program with its own re-queued second hop (duplicate
+            # scatter lanes, undefined table order).  Force straight to the
+            # final destination instead.
+            area.dst_region = area.final_dst
+            area.final_dst = -1
+        slots = ctx.alloc(area.dst_region, len(area))
+        if slots is None:
+            # Not enough pooled slots for the whole area right now.  If the
+            # destination has *some* space, split and make progress with the
+            # smaller half; otherwise wait for commits to free slots.
+            if len(area) > 1 and len(ctx.free[area.dst_region]) > 0:
+                mid = len(area) // 2
+                a = Area(
+                    area.block_ids[:mid],
+                    area.src_region,
+                    area.dst_region,
+                    area.attempts,
+                    request_id=area.request_id,
+                    priority=area.priority,
+                    final_dst=area.final_dst,
+                    fresh_alloc=area.fresh_alloc,
+                )
+                b = Area(
+                    area.block_ids[mid:],
+                    area.src_region,
+                    area.dst_region,
+                    area.attempts,
+                    request_id=area.request_id,
+                    priority=area.priority,
+                    final_dst=area.final_dst,
+                    fresh_alloc=area.fresh_alloc,
+                )
+                ctx.queue.appendleft(b)
+                ctx.queue.appendleft(a)
+                return True
+            return False  # caller re-queues (tick sets it aside, tries others)
+        area.dst_slots = slots
+        area.copied = 0
+        if area.fresh_alloc:
+            # Fresh-destination policies (move_pages()/autonuma analogues)
+            # pay the kernel's zero-fill pass before their copy/force lands.
+            # Fused: one batched zero program per tick, sequenced before the
+            # force/copy batches; legacy: immediate, in open order.
+            if cfg.fused_dispatch:
+                zeros.append(area)
+            else:
+                self._dispatch_zero_fill(area)
+        if area.attempts >= cfg.max_attempts_before_force:
+            # Write-through escalation: fused copy+flip, cannot be dirtied.
+            # Deliberately exempt from the per-link budgets (escalation must
+            # terminate), but its traffic is still accounted to the link.
+            # (Never a relay hop here — escalation converted it to direct
+            # above — so the per-block count is exact, not doubled.)
+            ctx.stats.bytes_copied += len(area) * ctx.pool_cfg.block_bytes
+            ctx.stats.blocks_forced += len(area)
+            self.budget.charge_link(area.src_region, area.dst_region, len(area))
+            if cfg.fused_dispatch:
+                forced.append(area)  # device dispatch batched at end of tick
+            else:
+                ctx.state = migrator.force_migrate(
+                    ctx.state,
+                    jax.numpy.asarray(area.block_ids),
+                    jax.numpy.asarray(area.dst_slots),
+                    int(area.dst_region),
+                )
+                ctx.stats.dispatches += 1
+            self._finalize_success(area)
+            return True
+        if cfg.fused_dispatch:
+            opened.append(area)  # begin batched at end of tick, before copies
+        else:
+            ctx.state = migrator.begin_area(ctx.state, jax.numpy.asarray(area.block_ids))
+            ctx.stats.dispatches += 1
+        ctx.active.append(area)
+        return True
+
+    def _open_epoch_huge(self, area: Area, opened: list[Area]) -> bool:
+        """Open a huge area's epoch: reserve one aligned run at the destination.
+
+        If the destination has >= G free slots but no contiguous run
+        (fragmentation), or the pipeline is empty and can never free one, the
+        huge block demotes and retries at small granularity — the second half
+        of the paper's §4.2 rule.
+        """
+        ctx = self.ctx
+        g = int(area.block_ids[0]) // ctx.pool_cfg.huge_factor
+        start = ctx.free[area.dst_region].take_run()
+        if start is None:
+            fragmented = len(ctx.free[area.dst_region]) >= ctx.pool_cfg.huge_factor
+            stalled = not ctx.active and not ctx.pending
+            if fragmented or stalled:
+                ctx.demote_group(g)
+                ctx.queue.extend(
+                    demote_area(area, ctx.cfg.reduction_factor, ctx.cfg.min_area_blocks)
+                )
+                return True
+            return False  # caller re-queues (tick sets it aside, tries others)
+        area.dst_slots = start + np.arange(ctx.pool_cfg.huge_factor, dtype=np.int32)
+        area.copied = 0
+        if ctx.cfg.fused_dispatch:
+            opened.append(area)  # members share the tick's begin batch
+        else:
+            ctx.state = migrator.begin_area(ctx.state, jax.numpy.asarray(area.block_ids))
+            ctx.stats.dispatches += 1
+        ctx.active.append(area)
+        return True
+
+    def _finalize_success(self, area: Area) -> None:
+        # Force path: all blocks flipped on device; mirror and free sources.
+        # Never a relay hop (escalation forces direct to the final
+        # destination), so the credit is always terminal.  In fused mode the
+        # force program itself runs at end of tick, so the freed source
+        # slots are quarantined (self._freed) instead of released: handing
+        # one out to a later open this tick would let that area's batched
+        # zero/force/copy write the slot before this force has read it.
+        ctx = self.ctx
+        if ctx.cfg.fused_dispatch:
+            ids = area.block_ids
+            self._freed.append(ctx.table[ids].copy())
+            ctx.table[ids, REGION] = area.dst_region
+            ctx.table[ids, SLOT] = area.dst_slots
+            ctx.migrating[ids] = False
+        else:
+            ctx.remap_host(area.block_ids, area.dst_region, area.dst_slots)
+        self.accounting.credit(area, forced=len(area))
+
+    # -- batched dispatch (fused path) -------------------------------------
+
+    def _pad(self, *arrays: np.ndarray) -> tuple[np.ndarray, ...]:
+        return pad_to_bucket(
+            bucket_size(len(arrays[0]), self.ctx.cfg.bucket_growth), *arrays
+        )
+
+    def _dispatch_zero_fill(self, area: Area) -> None:
+        ctx = self.ctx
+        (slots,) = self._pad(area.dst_slots)
+        ctx.state = migrator.zero_fill(
+            ctx.state, jax.numpy.asarray(slots), int(area.dst_region)
+        )
+        ctx.stats.dispatches += 1
+
+    def _dispatch_zero_batch(self, zeros: list[Area]) -> None:
+        """One zero-fill program per destination region covers every
+        fresh-destination area opened this tick — escalated and epoch alike
+        (dst_region is a static program argument)."""
+        if not zeros:
+            return
+        ctx = self.ctx
+        by_region: dict[int, list[np.ndarray]] = {}
+        for a in zeros:
+            by_region.setdefault(int(a.dst_region), []).append(a.dst_slots)
+        for region, slot_lists in by_region.items():
+            (slots,) = self._pad(np.concatenate(slot_lists))
+            ctx.state = migrator.zero_fill(ctx.state, jax.numpy.asarray(slots), region)
+            ctx.stats.dispatches += 1
+
+    def _dispatch_begin_batch(self, opened: list[Area]) -> None:
+        if not opened:
+            return
+        ctx = self.ctx
+        (ids,) = self._pad(np.concatenate([a.block_ids for a in opened]))
+        ctx.state = migrator.begin_areas(ctx.state, jax.numpy.asarray(ids))
+        ctx.stats.dispatches += 1
+
+    def _dispatch_force_batch(self, forced: list[Area]) -> None:
+        if not forced:
+            return
+        ctx = self.ctx
+        ids = np.concatenate([a.block_ids for a in forced])
+        regions = np.concatenate(
+            [np.full(len(a), a.dst_region, np.int32) for a in forced]
+        )
+        slots = np.concatenate([a.dst_slots for a in forced])
+        ids, regions, slots = self._pad(ids, regions, slots)
+        ctx.state = migrator.force_areas(
+            ctx.state,
+            jax.numpy.asarray(ids),
+            jax.numpy.asarray(regions),
+            jax.numpy.asarray(slots),
+        )
+        ctx.stats.dispatches += 1
+
+    def _dispatch_copy_batch(
+        self, plan: list[tuple[Area, np.ndarray, np.ndarray]]
+    ) -> None:
+        if not plan:
+            return
+        ctx = self.ctx
+        n_blocks = sum(len(ids) for _, ids, _ in plan)
+        ctx.stats.bytes_copied += n_blocks * ctx.pool_cfg.block_bytes
+        if ctx.cfg.backend == "ppermute":
+            self._dispatch_copy_batch_ppermute(plan)
+            return
+        s_per = ctx.pool_cfg.slots_per_region
+        ids = np.concatenate([ids for _, ids, _ in plan])
+        dst_regions = np.concatenate(
+            [np.full(len(c), a.dst_region, np.int32) for a, c, _ in plan]
+        )
+        dst_slots = np.concatenate([slots for _, _, slots in plan])
+        # Flat slot ids from the exact host mirror: table entries of in-flight
+        # blocks cannot change until their commit, which this driver issues.
+        src_flat = ctx.table[ids, REGION] * s_per + ctx.table[ids, SLOT]
+        dst_flat = dst_regions * s_per + dst_slots
+        src_flat, dst_flat = self._pad(src_flat, dst_flat)
+        ctx.state = migrator.fused_copy(
+            ctx.state,
+            jax.numpy.asarray(src_flat),
+            jax.numpy.asarray(dst_flat),
+            impl=ctx.cfg.copy_impl,
+        )
+        ctx.stats.dispatches += 1
+
+    def _dispatch_copy_batch_ppermute(
+        self, plan: list[tuple[Area, np.ndarray, np.ndarray]]
+    ) -> None:
+        ctx = self.ctx
+        if ctx.mesh is None or ctx.cfg.axis_name is None:
+            raise ValueError("ppermute backend requires mesh and axis_name")
+        # One point-to-point program per (src, dst) region pair this tick;
+        # areas are single-source so chunks group cleanly.
+        pairs: dict[tuple[int, int], list[tuple[np.ndarray, np.ndarray]]] = {}
+        for area, ids, slots in plan:
+            pairs.setdefault((area.src_region, area.dst_region), []).append(
+                (ctx.table[ids, SLOT], slots)
+            )
+        for (src, dst), chunks in pairs.items():
+            src_slots = np.concatenate([c[0] for c in chunks])
+            dst_slots = np.concatenate([c[1] for c in chunks])
+            src_slots, dst_slots = self._pad(src_slots, dst_slots)
+            ctx.state = migrator.fused_copy_ppermute(
+                ctx.state,
+                jax.numpy.asarray(src_slots),
+                jax.numpy.asarray(dst_slots),
+                int(src),
+                int(dst),
+                ctx.cfg.axis_name,
+                ctx.mesh,
+                impl=ctx.cfg.copy_impl,
+            )
+            ctx.stats.dispatches += 1
+
+    def _dispatch_commit_batch(self, ready: list[Area]) -> None:
+        if not ready:
+            return
+        ctx = self.ctx
+        ids = np.concatenate([a.block_ids for a in ready])
+        regions = np.concatenate(
+            [np.full(len(a), a.dst_region, np.int32) for a in ready]
+        )
+        slots = np.concatenate([a.dst_slots for a in ready])
+        offsets = np.cumsum([0] + [len(a) for a in ready])
+        p_ids, p_regions, p_slots = self._pad(ids, regions, slots)
+        ctx.state, verdict = migrator.commit_areas(
+            ctx.state,
+            jax.numpy.asarray(p_ids),
+            jax.numpy.asarray(p_regions),
+            jax.numpy.asarray(p_slots),
+        )
+        ctx.stats.dispatches += 1
+        for a in ready:
+            ctx.active.remove(a)
+        ctx.pending.append(CommitBatch(ready, offsets, verdict))
+
+    # -- huge-tier dispatch (contiguous runs + grouped commits) ------------
+
+    def _dispatch_copy_runs(self, run_plan: list[Area]) -> None:
+        """One device program copies every huge block scheduled this tick —
+        each as a single contiguous-run move, not G per-slot gathers."""
+        if not run_plan:
+            return
+        ctx = self.ctx
+        G = ctx.pool_cfg.huge_factor
+        s_per = ctx.pool_cfg.slots_per_region
+        nbytes = len(run_plan) * G * ctx.pool_cfg.block_bytes
+        ctx.stats.bytes_copied += nbytes
+        ctx.stats.bytes_copied_huge += nbytes
+        firsts = np.asarray([a.block_ids[0] for a in run_plan])
+        src = (ctx.table[firsts, REGION] * s_per + ctx.table[firsts, SLOT]).astype(np.int32)
+        dst = np.asarray(
+            [a.dst_region * s_per + a.dst_slots[0] for a in run_plan], np.int32
+        )
+        src, dst = self._pad(src, dst)
+        ctx.state = migrator.fused_copy_runs(
+            ctx.state,
+            jax.numpy.asarray(src),
+            jax.numpy.asarray(dst),
+            run=G,
+            impl=ctx.cfg.copy_impl,
+        )
+        ctx.stats.dispatches += 1
+
+    def _dispatch_commit_groups(self, ready: list[Area]) -> None:
+        """All-or-nothing commit of every copy-complete huge area (one program,
+        one verdict lane per huge block)."""
+        if not ready:
+            return
+        ctx = self.ctx
+        G = ctx.pool_cfg.huge_factor
+        k = len(ready)
+        bucket = bucket_size(k, ctx.cfg.bucket_growth)
+        members = np.concatenate([a.block_ids for a in ready]).reshape(k, G)
+        regions = np.asarray([a.dst_region for a in ready], np.int32)
+        starts = np.asarray([a.dst_slots[0] for a in ready], np.int32)
+        # pad by replicating lane-0's whole GROUP (idempotent duplicate remap)
+        members = np.concatenate([members, np.repeat(members[:1], bucket - k, axis=0)])
+        regions, starts = pad_to_bucket(bucket, regions, starts)
+        ctx.state, verdict = migrator.commit_groups(
+            ctx.state,
+            jax.numpy.asarray(members.reshape(-1)),
+            jax.numpy.asarray(regions),
+            jax.numpy.asarray(starts),
+            group=G,
+        )
+        ctx.stats.dispatches += 1
+        for a in ready:
+            ctx.active.remove(a)
+        ctx.pending.append(
+            CommitBatch(ready, np.arange(k + 1), verdict)  # 1 lane per area
+        )
+
+    # -- legacy per-area dispatch (fused_dispatch=False baseline) ----------
+
+    def _dispatch_copy(self, area: Area, ids: np.ndarray, slots: np.ndarray) -> None:
+        ctx = self.ctx
+        if ctx.cfg.backend == "ppermute":
+            if ctx.mesh is None or ctx.cfg.axis_name is None:
+                raise ValueError("ppermute backend requires mesh and axis_name")
+            ctx.state = migrator.copy_chunk_ppermute(
+                ctx.state,
+                jax.numpy.asarray(ids),
+                jax.numpy.asarray(slots),
+                int(area.src_region),
+                int(area.dst_region),
+                ctx.cfg.axis_name,
+                ctx.mesh,
+            )
+        else:
+            ctx.state = migrator.copy_chunk(
+                ctx.state,
+                jax.numpy.asarray(ids),
+                jax.numpy.asarray(slots),
+                int(area.dst_region),
+            )
+        ctx.stats.dispatches += 1
+        ctx.stats.bytes_copied += len(ids) * ctx.pool_cfg.block_bytes
+
+    def _dispatch_commit(self, area: Area) -> None:
+        ctx = self.ctx
+        ctx.state, verdict = migrator.commit_area(
+            ctx.state,
+            jax.numpy.asarray(area.block_ids),
+            jax.numpy.asarray(area.dst_slots),
+            int(area.dst_region),
+        )
+        ctx.stats.dispatches += 1
+        ctx.active.remove(area)
+        ctx.pending.append(CommitBatch([area], np.asarray([0, len(area)]), verdict))
+
+    # -- tier transitions (two-tier pool) ----------------------------------
+
+    def promote_candidates(self, limit: int | None = None) -> list[int]:
+        """Groups currently eligible for promotion (aligned, resident, cold)."""
+        ctx = self.ctx
+        if ctx.tiers is None:
+            return []
+        out = ctx.promotion.candidates(
+            ctx.tiers, ctx.table, ctx.migrating, ctx.last_write, ctx.stats.ticks
+        )
+        return out[:limit] if limit is not None else out
+
+    def promote_group(self, g: int) -> bool:
+        """Coalesce group ``g``'s G small blocks into one huge block.
+
+        Requires the policy's aligned/fully-resident/cold checks and a free
+        run in the group's region; the compaction copy+remap goes through the
+        atomic force program, so no epoch (and no race window) is needed.
+        Returns False (no state change) when ineligible or out of runs.
+        """
+        ctx = self.ctx
+        if ctx.tiers is None:
+            return False
+        if not ctx.promotion.eligible(
+            g, ctx.tiers, ctx.table, ctx.migrating, ctx.last_write, ctx.stats.ticks
+        ):
+            return False
+        members = ctx.tiers.members(g)
+        region = int(ctx.table[members[0], REGION])
+        start = ctx.free[region].take_run()
+        if start is None:
+            return False
+        G = ctx.pool_cfg.huge_factor
+        dst_slots = start + np.arange(G, dtype=np.int32)
+        ctx.state = migrator.force_areas(
+            ctx.state,
+            jax.numpy.asarray(members),
+            jax.numpy.asarray(np.full(G, region, np.int32)),
+            jax.numpy.asarray(dst_slots),
+        )
+        ctx.stats.dispatches += 1
+        ctx.stats.bytes_copied += G * ctx.pool_cfg.block_bytes
+        # take_run left the destination live as one huge allocation; the old
+        # scattered member slots free individually and coalesce.
+        ctx.free[region].put(ctx.table[members, SLOT])
+        ctx.table[members, SLOT] = dst_slots
+        ctx.tiers.promote(g, region, start)
+        ctx.stats.promotions += 1
+        return True
+
+    def adopt_huge(self, group_ids) -> int:
+        """Zero-copy promotion of groups whose members already sit on aligned
+        contiguous runs (e.g. straight out of ``init_state``'s dense
+        placement).  Pure host metadata; returns the number adopted.
+        """
+        ctx = self.ctx
+        if ctx.tiers is None:
+            return 0
+        G = ctx.pool_cfg.huge_factor
+        adopted = 0
+        for g in np.asarray(group_ids, dtype=np.int64):
+            g = int(g)
+            members = ctx.tiers.members(g)
+            if ctx.tiers.tier[g] or ctx.migrating[members].any():
+                continue
+            region = ctx.table[members, REGION]
+            start = int(ctx.table[members[0], SLOT])
+            contiguous = (
+                (region == region[0]).all()
+                and start % G == 0
+                and (ctx.table[members, SLOT] == start + np.arange(G)).all()
+            )
+            if not contiguous:
+                continue
+            ctx.free[int(region[0])].merge_allocated(start)
+            ctx.tiers.promote(g, int(region[0]), start)
+            adopted += 1
+        return adopted

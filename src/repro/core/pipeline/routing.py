@@ -1,0 +1,104 @@
+"""Routing stage: topology routes, relay hops, link-scaled area sizing.
+
+Turns "move these blocks from src to dst" into queued areas: consults the
+:class:`repro.topology.NumaTopology` (when attached) to route around
+congested/far links via a two-hop relay, and shrinks initial area sizes on
+slow links so every epoch's write-race exposure window stays roughly
+constant (adaptive.py rationale).  The relay's second hop is re-enqueued
+here too, when the verdict stage reports a first hop committed.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.adaptive import Area, area_blocks_for_distance, decompose_request
+from repro.core.pipeline.context import PipelineContext
+
+
+class RoutingStage:
+    def __init__(self, ctx: PipelineContext):
+        self.ctx = ctx
+
+    def initial_area_blocks(self, src: int, dst: int) -> int:
+        """Initial area size for one link: full size on the fastest link,
+        shrunk proportionally on slower ones (adaptive.py rationale)."""
+        topo = self.ctx.topology
+        if topo is None or src == dst:
+            return self.ctx.cfg.initial_area_blocks
+        return area_blocks_for_distance(
+            self.ctx.cfg.initial_area_blocks,
+            topo.link_cost(src, dst),
+            topo.min_link_distance,
+            self.ctx.cfg.min_area_blocks,
+        )
+
+    def plan(self, src: int, dst: int) -> tuple[int, int]:
+        """Route one hop: ``(first_dst, final_dst)`` where ``final_dst`` is
+        -1 for a direct route, or the true destination when ``first_dst`` is
+        only an intermediate relay (two hops strictly cheaper)."""
+        if self.ctx.topology is not None and self.ctx.cfg.multi_hop:
+            route = self.ctx.topology.route(src, dst)
+            if len(route) == 3:
+                return route[1], dst
+        return dst, -1
+
+    def enqueue(
+        self,
+        ids: np.ndarray,
+        src: int,
+        dst_region: int,
+        rid: int,
+        priority: int,
+        escalate: bool = False,
+        fresh_alloc: bool = False,
+    ) -> None:
+        """Queue areas for ``ids`` on route src -> dst, possibly via a relay.
+
+        With a topology and ``multi_hop``, a link whose distance exceeds some
+        two-hop alternative is routed around: the first hop targets the relay
+        region with ``final_dst`` pointing at the true destination; the relay
+        commit re-enqueues the second (always direct) hop.  ``escalate`` /
+        ``fresh_alloc`` are the scheduler's admission stamps.
+        """
+        ctx = self.ctx
+        first_dst, final = self.plan(src, dst_region)
+        areas = decompose_request(
+            ids,
+            src,
+            first_dst,
+            self.initial_area_blocks(src, first_dst),
+            request_id=rid,
+            priority=priority,
+            final_dst=final,
+            fresh_alloc=fresh_alloc,
+        )
+        if escalate:
+            for a in areas:
+                a.attempts = ctx.cfg.max_attempts_before_force
+        if final >= 0:
+            ctx.stats.multi_hop_areas += len(areas)
+        ctx.queue.extend(areas)
+
+    def relay_onward(self, area: Area, ids: np.ndarray) -> None:
+        """Second hop of a relayed area: blocks that just arrived at the
+        intermediate region continue — always direct, never re-relayed, so a
+        route is at most two hops — to the final destination.  Attempts carry
+        over: a first hop under write pressure keeps its escalation credit.
+        """
+        if len(ids) == 0:
+            return
+        ctx = self.ctx
+        ctx.migrating[ids] = True
+        subs = decompose_request(
+            ids,
+            area.dst_region,
+            area.final_dst,
+            self.initial_area_blocks(area.dst_region, area.final_dst),
+            request_id=area.request_id,
+            priority=area.priority,
+            fresh_alloc=area.fresh_alloc,
+        )
+        for sub in subs:
+            sub.attempts = area.attempts
+        ctx.queue.extend(subs)

@@ -1,0 +1,129 @@
+"""Verdict stage: harvest commit verdicts, split/demote/credit outcomes.
+
+Commit dispatches return packed dirty vectors; this stage harvests them
+(opportunistically, or blocking) and resolves each area: clean blocks remap
+in the host mirror and credit their request (or continue to a relay's
+second hop), dirty blocks free their reserved slots and requeue smaller
+(paper §4.2 adaptive splitting), a rejected huge run retries whole or
+demotes to small granularity, and cancelled requests drop their dirty
+remainders instead of retrying.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.adaptive import Area, demote_area, split_area
+from repro.core.pipeline.accounting import AccountingStage
+from repro.core.pipeline.context import PipelineContext
+from repro.core.pipeline.routing import RoutingStage
+from repro.core.state import REGION, SLOT
+
+
+class VerdictStage:
+    def __init__(
+        self,
+        ctx: PipelineContext,
+        routing: RoutingStage,
+        accounting: AccountingStage,
+    ):
+        self.ctx = ctx
+        self.routing = routing
+        self.accounting = accounting
+
+    # -- harvest -----------------------------------------------------------
+
+    def harvest(self, block: bool) -> None:
+        """Process every pending commit verdict already on the host (or all
+        of them, synchronizing, when ``block``)."""
+        ctx = self.ctx
+        still = []
+        for batch in ctx.pending:
+            ready = block
+            if not ready:
+                try:
+                    ready = batch.verdict.is_ready()
+                except AttributeError:  # pragma: no cover - older jax
+                    ready = True
+            if not ready:
+                still.append(batch)
+                continue
+            packed = np.asarray(batch.verdict)
+            for area, start, end in zip(batch.areas, batch.offsets, batch.offsets[1:]):
+                self._process(area, packed[start:end])
+        ctx.pending = still
+
+    # -- per-area resolution -----------------------------------------------
+
+    def _process(self, area: Area, dirty: np.ndarray) -> None:
+        ctx = self.ctx
+        if area.huge:
+            self._process_huge(area, bool(dirty[0]))
+            return
+        clean = ~dirty
+        # Clean blocks: the remap took effect on device; mirror it.
+        clean_ids = area.block_ids[clean]
+        ctx.remap_host(clean_ids, area.dst_region, area.dst_slots[clean])
+        if area.final_dst >= 0 and area.final_dst != area.dst_region:
+            # Relay hop committed: the blocks now sit at the intermediate
+            # region; queue the (direct) second hop.  The request is only
+            # credited when they arrive at the final destination.
+            if len(clean_ids) and self.accounting.cancelled(area):
+                self.accounting.drop_blocks(area, clean_ids)
+            else:
+                self.routing.relay_onward(area, clean_ids)
+        else:
+            ctx.stats.blocks_migrated += int(clean.sum())
+            self.accounting.credit(area, committed=int(clean.sum()))
+        # Dirty blocks: stale copies; free reserved slots and requeue smaller —
+        # unless the owning request was cancelled, in which case the in-flight
+        # epoch ends here: drop the dirty remainder instead of retrying.
+        n_dirty = int(dirty.sum())
+        if n_dirty:
+            ctx.stats.dirty_rejections += n_dirty
+            ctx.free[area.dst_region].put(area.dst_slots[dirty])
+            if self.accounting.cancelled(area):
+                self.accounting.drop_blocks(area, area.block_ids[dirty])
+                return
+            subs = split_area(area, dirty, ctx.cfg.reduction_factor, ctx.cfg.min_area_blocks)
+            ctx.stats.splits += max(0, len(subs) - 1)
+            ctx.queue.extend(subs)
+
+    def _process_huge(self, area: Area, is_dirty: bool) -> None:
+        """Huge commits are all-or-nothing: remap the run, or retry/demote."""
+        ctx = self.ctx
+        G = ctx.pool_cfg.huge_factor
+        g = int(area.block_ids[0]) // G
+        if not is_dirty:
+            ids = area.block_ids
+            old_region = int(ctx.table[ids[0], REGION])
+            old_start = int(ctx.table[ids[0], SLOT])
+            ctx.free[old_region].free_run(old_start)
+            ctx.table[ids, REGION] = area.dst_region
+            ctx.table[ids, SLOT] = area.dst_slots
+            ctx.migrating[ids] = False
+            ctx.tiers.relocate(g, area.dst_region, int(area.dst_slots[0]))
+            ctx.stats.blocks_migrated += G
+            ctx.stats.huge_areas_committed += 1
+            self.accounting.credit(area, committed=G)
+            return
+        # Rejected: a member was written during the run's copy epoch.  Free
+        # the reserved destination run and either retry the run whole or —
+        # after demote_after_attempts rejections (sustained write pressure) —
+        # split the huge block and retry at small granularity (paper §4.2).
+        ctx.stats.dirty_rejections += G
+        ctx.free[area.dst_region].free_run(int(area.dst_slots[0]))
+        area.attempts += 1
+        area.dst_slots = None
+        if self.accounting.cancelled(area):
+            self.accounting.drop_blocks(area, area.block_ids)
+            return
+        if area.attempts >= ctx.cfg.demote_after_attempts:
+            ctx.demote_group(g)
+            subs = demote_area(area, ctx.cfg.reduction_factor, ctx.cfg.min_area_blocks)
+            ctx.stats.splits += max(0, len(subs) - 1)
+            ctx.queue.extend(subs)
+        else:
+            ctx.queue.append(area)
+
+

@@ -14,9 +14,11 @@ MigrationDriver; tests exercise drain-under-writes correctness.
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
-from repro.core import MigrationDriver
+from repro.core import MigrationDriver, make_scheduler
 
 # Evacuations outrank routine placement traffic in the priority queue.
 DRAIN_PRIORITY = 10
@@ -66,17 +68,36 @@ def drain_plan(driver: MigrationDriver, failed_region: int) -> dict[int, np.ndar
     return {r: np.asarray(v, np.int32) for r, v in plan.items() if v}
 
 
-def drain_region(driver: MigrationDriver, failed_region: int) -> int:
+def drain_region(
+    driver: MigrationDriver, failed_region: int, scheduler=None
+) -> int:
     """Request evacuation of every block on ``failed_region``; returns count.
 
     Evacuations are submitted at :data:`DRAIN_PRIORITY` so they overtake any
-    routine migration traffic already queued.
+    routine migration traffic already queued.  ``scheduler`` selects the
+    migration policy for the evacuation itself (the
+    :class:`repro.core.pipeline.SchedulerPolicy` seam): None inherits the
+    driver's policy (reliable async epochs by default); ``"sync"`` — for a
+    region that is about to go away *now* — escalates every area straight to
+    the atomic force program, trading copy pacing for the shortest possible
+    evacuation.
     """
     session = driver.default_session()
+    ticket = None
+    if scheduler is not None:
+        ticket = make_scheduler(scheduler).admission_ticket()
+        # An evacuation must move EVERY block: never skip busy ones (the
+        # sync policy's EBUSY semantics would strand them on a dying region).
+        # And never zero-fill: survivors' destinations are pre-faulted pooled
+        # slots, so the move_pages() fresh-allocation pass would only add a
+        # pointless device write per block to an evacuation we want short.
+        ticket = dataclasses.replace(ticket, skip_busy=False, fresh_alloc=False)
     plan = drain_plan(driver, failed_region)
     n = 0
     for dst, ids in plan.items():
-        n += session.leap(ids, dst, priority=DRAIN_PRIORITY).requested
+        n += session.leap(
+            ids, dst, priority=DRAIN_PRIORITY, ticket=ticket
+        ).requested
     return n
 
 

@@ -12,7 +12,12 @@ migrates as a single area through one contiguous-run copy.  The pieces:
   * :mod:`repro.pool.policy` — promotion eligibility (aligned, fully
     resident, cold) and the demotion bookkeeping rule (paper §4.2).
 
-See DESIGN.md §5 for the invariants.
+Consumers: the staged pipeline's :class:`~repro.core.pipeline.context.
+PipelineContext` holds the per-region allocators and the level-1 table;
+promotion/adoption compaction runs in the dispatch stage
+(``DispatchStage.promote_group``/``adopt_huge``) and demotion in the
+verdict stage (``VerdictStage.demote_group``) — see DESIGN.md §5/§8 for
+the invariants.
 """
 
 from repro.pool.buddy import BuddyAllocator

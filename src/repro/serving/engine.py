@@ -58,6 +58,11 @@ class PagedConfig:
     # driver's §4.2 demotion rule is for (promote eagerly, demote under
     # pressure).  Off by default: promoted KV stays cold by construction.
     promote_eager: bool = False
+    # Migration scheduler policy for the KV pool's driver: "leap" (default,
+    # reliable async epochs), "sync" (move_pages()-style forced moves), or a
+    # SchedulerPolicy instance — the repro.core.pipeline seam, selectable
+    # per deployment so rebalance traffic can trade race-freedom for pacing.
+    scheduler: object = "leap"
 
 
 @dataclasses.dataclass
@@ -129,7 +134,9 @@ class PagedEngine:
         n_blocks = pcfg.n_regions * pages_per_region
         placement = np.repeat(np.arange(pcfg.n_regions), pages_per_region)
         state = init_state(self.pool_cfg, n_blocks, placement.astype(np.int32))
-        self.driver = MigrationDriver(state, self.pool_cfg, pcfg.leap)
+        self.driver = MigrationDriver(
+            state, self.pool_cfg, pcfg.leap, scheduler=pcfg.scheduler
+        )
         # The engine drives migration exclusively through the handle-based
         # session API; the sealed facade is its only placement view.
         self.session = self.driver.default_session()

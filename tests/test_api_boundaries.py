@@ -57,6 +57,38 @@ def test_no_private_driver_access_outside_core():
     )
 
 
+# Deprecated MigrationDriver shims: request()/drain() on a driver-shaped
+# receiver (``drv``/``driver``/``.driver``/``d0..9`` locals, as the
+# benchmarks and examples spell them).  Session-level drain
+# (``session.drain``/``store.drain``/``sess.drain``) is the sanctioned API
+# and deliberately does NOT match.
+_DEPRECATED = re.compile(
+    r"(?:\bdrv\w*|\bdriver|\.driver|\bd\d+)\s*\.\s*(?:request|drain)\s*\("
+)
+
+# Examples and benchmarks are user-facing documentation: they must model the
+# session/handle API, never the deprecation shims.
+_DEPRECATED_SCANNED = ["benchmarks", "examples"]
+
+
+def test_no_deprecated_driver_shims_in_benchmarks_or_examples():
+    offenders = []
+    for d in _DEPRECATED_SCANNED:
+        for path in sorted((REPO / d).rglob("*.py")):
+            if _exempt(path):
+                continue
+            for i, line in enumerate(path.read_text().splitlines(), 1):
+                if _DEPRECATED.search(line):
+                    offenders.append(
+                        f"{path.relative_to(REPO)}:{i}: {line.strip()}"
+                    )
+    assert not offenders, (
+        "deprecated MigrationDriver.request()/drain() shim usage in "
+        "benchmarks/examples (use LeapSession.leap()/drain() or "
+        "LeapHandle.wait()):\n" + "\n".join(offenders)
+    )
+
+
 def test_benchmarks_and_examples_import_cleanly_scoped_api():
     """Benchmarks/examples may import repro.api and repro.core publics; the
     scan above plus this smoke keeps the dependency direction honest."""

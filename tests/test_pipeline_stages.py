@@ -1,0 +1,303 @@
+"""Pipeline-refactor regression tests.
+
+Four families:
+  * re-export shims — the pre-pipeline homes (``repro.core.driver``) keep
+    exporting ``LeapConfig``/``MigrationStats``/``FreeList``/
+    ``RequestState`` (and the same objects as the new modules);
+  * scheduler policies — the SchedulerPolicy seam stamps admission tickets
+    that flow through the shared dispatch/verdict stages;
+  * cancel racing a relay's second hop — ``cancel_request()`` landing while
+    first-hop commits have re-enqueued second hops must drop them
+    slot-leak-free with exact accounting (PR-4 behavior, now pinned);
+  * priority across stages — a high-priority request submitted after a
+    low-priority one has entered the pipeline still overtakes it.
+"""
+
+import numpy as np
+
+from repro.core import (
+    LeapConfig,
+    MigrationDriver,
+    PoolConfig,
+    init_state,
+)
+from repro.core.pipeline import (
+    AdmissionTicket,
+    LeapScheduler,
+    SamplingScheduler,
+    SchedulerPolicy,
+    SyncScheduler,
+    make_scheduler,
+)
+from repro.topology import NumaTopology
+
+
+def make_driver(topo, n_regions, n_blocks, slots=None, leap=None, **kw):
+    cfg = PoolConfig(
+        n_regions, slots or max(n_blocks + 8, 32), (1, 16), topology=topo
+    )
+    state = init_state(cfg, n_blocks, np.zeros(n_blocks, np.int32))
+    return MigrationDriver(state, cfg, leap or LeapConfig(), **kw)
+
+
+# -- re-export shims ---------------------------------------------------------
+
+
+def test_driver_module_reexports_pre_pipeline_names():
+    from repro.core import config, queues, stats
+    from repro.core import driver as drv_mod
+
+    assert drv_mod.LeapConfig is config.LeapConfig
+    assert drv_mod.MigrationStats is stats.MigrationStats
+    assert drv_mod.RequestState is stats.RequestState
+    assert drv_mod.FreeList is queues.FreeList
+    assert drv_mod.AreaQueue is queues.AreaQueue
+    # legacy private spellings still resolve
+    assert drv_mod._AreaQueue is queues.AreaQueue
+    assert drv_mod._CommitBatch is queues.CommitBatch
+
+
+def test_core_driver_import_statement_keeps_working():
+    # the literal import the acceptance criteria pins
+    from repro.core.driver import FreeList, LeapConfig, MigrationStats  # noqa: F401
+
+
+# -- scheduler policies ------------------------------------------------------
+
+
+def test_make_scheduler_resolves_names_and_instances():
+    assert isinstance(make_scheduler(None), LeapScheduler)
+    assert isinstance(make_scheduler("leap"), LeapScheduler)
+    assert isinstance(make_scheduler("sync"), SyncScheduler)
+    sampling = make_scheduler("sampling", n_blocks=8)
+    assert isinstance(sampling, SamplingScheduler)
+    assert make_scheduler(sampling) is sampling
+    for policy in (LeapScheduler(), SyncScheduler(), sampling):
+        assert isinstance(policy, SchedulerPolicy)
+    try:
+        make_scheduler("bogus")
+    except ValueError as e:
+        assert "bogus" in str(e)
+    else:  # pragma: no cover
+        raise AssertionError("expected ValueError")
+
+
+def test_sync_scheduler_driver_forces_in_one_drain():
+    drv = make_driver(None, 2, 8, scheduler="sync")
+    sess = drv.default_session()
+    h = sess.leap(np.arange(8), 1)
+    assert h.wait(10)
+    p = h.progress()
+    assert p.forced == 8 and p.committed == 0  # escalated, no copy epochs
+    assert (drv.host_placement() == 1).all() and drv.verify_mirror()
+
+
+def test_per_request_ticket_overrides_driver_policy():
+    drv = make_driver(None, 2, 8)  # default leap policy
+    sess = drv.default_session()
+    h = sess.leap(np.arange(4), 1, ticket=AdmissionTicket(escalate=True))
+    assert h.wait(10)
+    assert h.progress().forced == 4
+    h2 = sess.leap(np.asarray([4, 5]), 1)  # policy default: reliable epochs
+    assert h2.wait(100)
+    assert h2.progress().committed == 2 and h2.progress().forced == 0
+
+
+def test_fresh_alloc_ticket_zeroes_destination_before_copy():
+    import jax.numpy as jnp
+
+    from repro.core import leap_read, leap_write
+
+    cfg = PoolConfig(2, 16, (4,))
+    state = init_state(cfg, 4, np.zeros(4, np.int32))
+    data = np.arange(16, dtype=np.float32).reshape(4, 4) + 1.0
+    state = leap_write(state, jnp.arange(4), jnp.asarray(data))
+    drv = MigrationDriver(state, cfg)
+    h = drv.default_session().leap(
+        np.arange(4), 1, ticket=AdmissionTicket(fresh_alloc=True)
+    )
+    assert h.wait(100) and drv.verify_mirror()
+    # payload survives the zero pass (zero lands before the copy)
+    np.testing.assert_array_equal(
+        np.asarray(leap_read(drv.state, jnp.arange(4))), data
+    )
+    assert drv.stats.blocks_migrated == 4
+
+
+def test_drain_region_sync_scheduler_escalates_but_skips_nothing():
+    from repro.distributed.fault import drain_region
+
+    drv = make_driver(None, 3, 12, slots=16)
+    sess = drv.default_session()
+    n = drain_region(drv, 0, scheduler="sync")
+    assert n == 12
+    assert sess.drain()
+    assert (drv.host_placement() != 0).all() and drv.verify_mirror()
+    # the sync policy's escalation applied (atomic forces, no copy epochs)...
+    assert drv.stats.blocks_forced == 12 and drv.stats.blocks_migrated == 0
+    # ...but its EBUSY skip did not: every block left the dying region
+    assert drv.stats.blocks_requested == 12
+
+
+def test_same_tick_mixed_force_batches_preserve_payloads():
+    # Regression: a batched (non-fresh) escalation frees its source slots in
+    # the same tick that an opposite-direction fresh escalation opens.  The
+    # quarantine must keep those slots out of the fresh area's hands until
+    # the force batch has been dispatched — otherwise its zero/force pass
+    # lands on slots the batched force still has to read.
+    import jax.numpy as jnp
+
+    from repro.core import leap_read, leap_write
+
+    cfg = PoolConfig(2, 16, (4,))
+    state = init_state(cfg, 8, np.asarray([0, 0, 0, 0, 1, 1, 1, 1], np.int32))
+    data = np.arange(32, dtype=np.float32).reshape(8, 4) + 1.0
+    state = leap_write(state, jnp.arange(8), jnp.asarray(data))
+    drv = MigrationDriver(state, cfg)
+    sess = drv.default_session()
+    # both submitted before any tick: both open (and force) in ONE tick
+    a = sess.leap(np.arange(4), 1, ticket=AdmissionTicket(escalate=True))
+    b = sess.leap(
+        np.arange(4, 8), 0,
+        ticket=AdmissionTicket(escalate=True, fresh_alloc=True),
+    )
+    assert a.wait(100) and b.wait(100)
+    assert drv.verify_mirror()
+    np.testing.assert_array_equal(
+        np.asarray(leap_read(drv.state, jnp.arange(8))), data
+    )
+
+
+def test_escalated_submit_keeps_huge_groups_already_at_destination():
+    cfg = PoolConfig(2, 32, (4,), huge_factor=4)
+    state = init_state(cfg, 16, np.zeros(16, np.int32))
+    drv = MigrationDriver(state, cfg)
+    assert drv.adopt_huge(np.arange(4)) == 4
+    # a no-op escalated request (everything already home) must not split
+    # healthy huge mappings
+    req = drv.submit(np.arange(16), 0, ticket=AdmissionTicket(escalate=True))
+    assert req.requested == 0 and req.done
+    assert drv.stats.demotions == 0 and drv.verify_tiers()
+    assert drv.tiers.tier.sum() == 4  # all four groups still huge
+
+
+# -- cancel racing a relay's second hop --------------------------------------
+
+
+def _tick_until_second_hop_queued(drv, sess, handle, relay_regions, max_ticks=500):
+    """Advance until some blocks of ``handle`` sit at a relay region with
+    their (queued, unopened) second hop pending; returns those block ids."""
+    for _ in range(max_ticks):
+        sess.tick()
+        sess.poll(block=True)
+        placement = drv.host_placement()
+        parked = np.nonzero(np.isin(placement, relay_regions))[0]
+        if len(parked) and not handle.done:
+            return parked
+    raise AssertionError("second hop never became observable")
+
+
+def test_cancel_while_relay_second_hop_is_queued():
+    # quad socket with the 0->1 link congested: traffic 0->1 relays via 2/3
+    topo = NumaTopology.quad_socket().congested(0, 1, 16)
+    drv = make_driver(topo, 4, 48, leap=LeapConfig(budget_blocks_per_tick=8))
+    sess = drv.default_session()
+    h = sess.leap(np.arange(48), 1)
+    assert drv.stats.multi_hop_areas > 0  # routing really planned a relay
+    parked = _tick_until_second_hop_queued(drv, sess, h, relay_regions=(2, 3))
+    dropped = h.cancel()
+    assert dropped > 0  # the queued second hop (plus any queued first hops)
+    assert h.wait(500)
+    p = h.progress()
+    # exact accounting across both hops: every block terminal exactly once
+    assert p.committed + p.forced + p.cancelled == p.requested == 48
+    assert p.cancelled >= len(parked)  # the parked blocks never re-departed
+    assert drv.done and drv.verify_mirror()
+    # parked blocks stay at the relay region, not the final destination...
+    assert np.isin(drv.host_placement()[parked], (2, 3)).all()
+    # ...and are re-submittable immediately (their open marks were cleared,
+    # no destination slots leaked)
+    assert not drv.in_migration(parked).any()
+    h2 = sess.leap(parked, 1)
+    assert h2.requested == len(parked) and h2.wait(1000)
+    assert (drv.host_placement()[parked] == 1).all() and drv.verify_mirror()
+
+
+def test_cancel_after_full_relay_delivery_is_a_noop():
+    topo = NumaTopology.quad_socket().congested(0, 1, 16)
+    drv = make_driver(topo, 4, 16)
+    sess = drv.default_session()
+    h = sess.leap(np.arange(16), 1)
+    assert h.wait(1000)
+    assert h.cancel() == 0  # terminal: nothing to drop
+    p = h.progress()
+    assert p.committed == 16 and p.cancelled == 0
+
+
+# -- priority across pipeline stages -----------------------------------------
+
+
+def test_high_priority_overtakes_low_priority_mid_pipeline():
+    # Low-priority request enters the pipeline first and gets a head start
+    # (one tick: areas open/copy).  A high-priority request submitted AFTER
+    # must still finish strictly earlier: the admission stage queues it
+    # ahead, and dispatch drains its areas before opening more low ones.
+    drv = make_driver(
+        None, 2, 64,
+        slots=80,
+        leap=LeapConfig(initial_area_blocks=8, budget_blocks_per_tick=8),
+    )
+    sess = drv.default_session()
+    order = []
+    low = sess.leap(
+        np.arange(48), 1, priority=0, on_done=lambda h: order.append("low")
+    )
+    sess.tick()  # low-priority areas are now mid-pipeline (active/copying)
+    high = sess.leap(
+        np.arange(48, 64), 1, priority=5, on_done=lambda h: order.append("high")
+    )
+    ticks_high = None
+    for t in range(2000):
+        sess.tick()
+        sess.poll(block=True)
+        if high.done and ticks_high is None:
+            ticks_high = t
+        if low.done and high.done:
+            break
+    assert high.done and low.done
+    assert order == ["high", "low"]  # completion order, not submit order
+    # high finished while low still had work left: no priority inversion
+    assert ticks_high is not None
+    assert low.progress().committed + low.progress().forced == 48
+
+
+def test_priority_preserved_across_split_and_requeue():
+    # A dirtied high-priority area splits in the verdict stage; its fragments
+    # must keep the priority and drain before the low request's still-QUEUED
+    # areas (in-flight low epochs may finish — priority governs the queue,
+    # it does not preempt open epochs).
+    import jax.numpy as jnp
+
+    drv = make_driver(
+        None, 2, 64,
+        slots=80,
+        leap=LeapConfig(initial_area_blocks=16, budget_blocks_per_tick=16),
+    )
+    sess = drv.default_session()
+    vals = jnp.zeros((4, 1, 16), np.float32)
+    high = sess.leap(np.arange(16), 1, priority=5)
+    low = sess.leap(np.arange(16, 64), 1, priority=0)  # 3 areas, mostly queued
+    # dirty part of the high request mid-epoch so it splits and requeues
+    sess.tick()
+    drv.write(jnp.asarray(np.arange(4, dtype=np.int32)), vals)
+    done_order = []
+    high.on_done(lambda h: done_order.append("high"))
+    low.on_done(lambda h: done_order.append("low"))
+    for _ in range(2000):
+        if high.done and low.done:
+            break
+        sess.tick()
+        sess.poll(block=True)
+    assert high.done and low.done and drv.verify_mirror()
+    assert done_order[0] == "high"
+    assert high.progress().committed == 16  # split fragments re-committed clean
