@@ -27,6 +27,24 @@ from benchmarks.common import WriteBurst, emit, make_pool
 from repro.core import LeapConfig
 
 
+def _modeled_units(stats, huge_factor):
+    """Deterministic device-cost of a drain, in grid-step units.
+
+    The Fig. 7 claim is an addressing claim, not a wall-clock one: a huge
+    block moves as ONE contiguous-run copy (G blocks per grid step) where
+    the small pool pays G per-slot gathers.  Model each device program
+    launch as one fixed unit, each per-slot gather step as one unit, and
+    each committed huge run as one unit for its whole G-block copy.  Every
+    input is an exact pipeline counter, so the resulting speedup is
+    machine-independent and bench_compare gates it at the tight threshold
+    (wall ratios of two ~20ms drains jitter far too much to gate).
+    """
+    moved = stats.blocks_migrated + stats.blocks_forced
+    huge_runs = stats.huge_areas_committed
+    small_steps = moved - huge_runs * huge_factor
+    return stats.dispatches + huge_runs + small_steps
+
+
 def _drain_throughput(n_blocks, block_kb, huge_factor):
     lc = LeapConfig(initial_area_blocks=64, budget_blocks_per_tick=64)
     _, drv, _ = make_pool(
@@ -39,31 +57,33 @@ def _drain_throughput(n_blocks, block_kb, huge_factor):
     jax.block_until_ready(drv.state.pool)
     dt = time.perf_counter() - t0
     assert ok and drv.verify_mirror() and drv.verify_tiers()
-    return dt, drv.stats
+    return dt, drv.stats, _modeled_units(drv.stats, huge_factor)
 
 
 def run_drain(n_blocks=256, block_kb=64, huge_factor=8):
     total_mb = n_blocks * block_kb / 1024
     results = {}
+    units = {}
     for label, g in (("small", 1), ("huge", huge_factor)):
         _drain_throughput(n_blocks, block_kb, g)  # warm the jit caches
-        dt, stats = _drain_throughput(n_blocks, block_kb, g)
-        results[label] = dt
+        dt, stats, u = _drain_throughput(n_blocks, block_kb, g)
+        results[label], units[label] = dt, u
         extra = ""
         if g > 1:
-            # speedup_wall is a within-run wall ratio of two ~20ms drains —
-            # deliberately NOT the gated "speedup" key (scripts/bench_compare
-            # gates deterministic metrics only; disp_per_tick carries that).
+            # "speedup" is the MODELED grid-step ratio (gated key, see
+            # _modeled_units); speedup_wall stays as the ungated wall-clock
+            # diagnostic — a within-run ratio of two ~20ms drains.
             extra = (
                 f";huge_committed={stats.huge_areas_committed}"
                 f";huge_MB={stats.bytes_copied_huge / 2**20:.1f}"
+                f";speedup=x{units['small'] / u:.2f}"
                 f";speedup_wall=x{results['small'] / dt:.2f}"
             )
         emit(
             f"fig7/drain/{label}",
             dt * 1e6,
             f"MBps={total_mb / dt:.0f};disp_per_tick={stats.dispatches_per_tick:.2f}"
-            + extra,
+            f";units={u}" + extra,
         )
     return results
 

@@ -1,0 +1,265 @@
+"""Chaos driver: run one :class:`ScenarioSpec` through the real pipeline.
+
+The driver builds a live pool + :class:`LeapSession` exactly as an
+application would, then ticks the scenario: each tick it steps the
+workload (drain / serving-style leap stream / exchange, plus the steady
+writer mix), fires any fault events scheduled for that tick, and runs the
+:class:`InvariantChecker` after *every* event and *every* tick.  All
+randomness derives from ``spec.seed``, so a run — including events whose
+tick was seeded-random — replays deterministically from the serialized
+spec alone.
+
+``run_with_repro`` is the harness entry point: on an invariant violation
+it serializes the offending spec to ``<repro_dir>/last_failure.json`` (and
+a per-seed file) and re-raises, so generative exploration (Hypothesis) or
+a CI sweep leaves behind a replayable minimized repro:
+
+    python -m repro.chaos --replay <spec.json>
+
+``apply_sabotage`` deliberately re-introduces known-fixed bugs (e.g. the
+pre-quarantine same-tick slot reuse) to prove the checker actually catches
+them — the harness's own regression test.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.chaos.invariants import InvariantChecker, InvariantViolation
+from repro.chaos.sabotage import apply_sabotage
+from repro.chaos.spec import ScenarioSpec
+from repro.core import LeapConfig, MigrationDriver, PoolConfig, init_state, leap_write
+from repro.distributed import fault
+
+DRAIN_TARGET_PRIORITY = 1  # bulk-drain workload priority (above stream's 0)
+
+
+@dataclasses.dataclass
+class ChaosReport:
+    """Outcome of one scenario run (the run raises on invariant violations)."""
+
+    spec: ScenarioSpec
+    completed: bool  # final drain emptied the pipeline within the tick cap
+    ticks_run: int
+    checks_run: int
+    events_fired: list[str]
+    drain_refusals: int  # drain_region raised "not enough surviving capacity"
+    handles_issued: int
+    blocks_requested: int
+    blocks_migrated: int
+    blocks_forced: int
+    blocks_cancelled: int
+
+
+class ChaosDriver:
+    """Builds and runs one scenario; see the module docstring."""
+
+    def __init__(self, spec: ScenarioSpec, sabotage: str | None = None):
+        spec.validate()
+        self.spec = spec
+        self.rng = np.random.default_rng(spec.seed)
+        # Resolve seeded-random event ticks first (fixed draw order), so the
+        # schedule is a pure function of the spec.
+        self.schedule: list[tuple[int, object]] = []
+        for ev in spec.faults:
+            tick = ev.tick if ev.tick >= 0 else int(self.rng.integers(0, spec.ticks))
+            self.schedule.append((tick, ev))
+
+        topo = spec.make_topology()
+        self.base_topology = topo
+        pool_cfg = PoolConfig(
+            spec.n_regions,
+            spec.slots_per_region,
+            (spec.block_elems,),
+            huge_factor=spec.huge_factor,
+            topology=topo,
+        )
+        placement = self._placement()
+        state = init_state(pool_cfg, spec.n_blocks, placement)
+        data = self.rng.normal(size=(spec.n_blocks, spec.block_elems)).astype(np.float32)
+        state = leap_write(state, jnp.arange(spec.n_blocks), jnp.asarray(data))
+        cfg = LeapConfig(
+            initial_area_blocks=spec.initial_area_blocks,
+            chunk_blocks=spec.chunk_blocks,
+            budget_blocks_per_tick=spec.budget_blocks_per_tick,
+            max_attempts_before_force=spec.max_attempts_before_force,
+            demote_after_attempts=spec.demote_after_attempts,
+        )
+        self.driver = MigrationDriver(state, pool_cfg, cfg, scheduler=spec.scheduler)
+        if spec.adopt_huge:
+            self.driver.adopt_huge(np.arange(spec.n_blocks // spec.huge_factor))
+        self.session = self.driver.default_session()
+        self.shadow = data.copy()
+        self.checker = InvariantChecker(self.driver, self.shadow)
+        self.handles: list = []
+        self.events_fired: list[str] = []
+        self.drain_refusals = 0
+        if sabotage is not None:
+            apply_sabotage(self.driver, sabotage)
+
+    def _placement(self) -> np.ndarray:
+        spec = self.spec
+        if spec.placement == "dense":
+            return np.zeros(spec.n_blocks, np.int32)
+        if spec.placement == "spread":
+            return (np.arange(spec.n_blocks) % spec.n_regions).astype(np.int32)
+        return self.rng.integers(0, spec.n_regions, size=spec.n_blocks).astype(np.int32)
+
+    # -- workload ------------------------------------------------------------
+
+    def _leap(self, ids, dst: int, priority: int = 0) -> None:
+        h = self.session.leap(np.asarray(ids, np.int32), int(dst), priority=priority)
+        self.handles.append(h)
+
+    def _step_workload(self, t: int) -> None:
+        spec = self.spec
+        if spec.workload == "drain" and t == 0:
+            self._leap(np.arange(spec.n_blocks), spec.n_regions - 1,
+                       priority=DRAIN_TARGET_PRIORITY)
+        elif spec.workload == "exchange" and t == 0:
+            # Every region's blocks head to the next region over — the
+            # bidirectional pattern that motivated the slot quarantine.
+            placement = self.driver.host_placement()
+            for r in range(spec.n_regions):
+                mine = np.nonzero(placement == r)[0]
+                if len(mine):
+                    self._leap(mine, (r + 1) % spec.n_regions)
+        elif spec.workload == "stream" and t % spec.leap_every == 0:
+            k = min(spec.blocks_per_leap, spec.n_blocks)
+            ids = self.rng.choice(spec.n_blocks, size=k, replace=False)
+            self._leap(
+                ids,
+                int(self.rng.integers(0, spec.n_regions)),
+                priority=int(self.rng.integers(0, spec.max_priority + 1)),
+            )
+        if spec.writes_per_tick:
+            self._write_random(spec.writes_per_tick)
+
+    def _write_random(self, k: int) -> None:
+        spec = self.spec
+        k = min(k, spec.n_blocks)
+        ids = self.rng.choice(spec.n_blocks, size=k, replace=False)
+        vals = self.rng.normal(size=(k, spec.block_elems)).astype(np.float32)
+        self.driver.write(jnp.asarray(ids.astype(np.int32)), jnp.asarray(vals))
+        self.shadow[ids] = vals
+
+    # -- fault events --------------------------------------------------------
+
+    def _fire(self, ev) -> None:
+        a = ev.args
+        if ev.kind == "drain_region":
+            try:
+                fault.drain_region(
+                    self.driver, int(a.get("region", 0)), scheduler=a.get("scheduler")
+                )
+            except RuntimeError:
+                # A legitimate refusal (not enough surviving capacity right
+                # now, e.g. everything reserved mid-flight) — recorded, not
+                # an invariant violation.
+                self.drain_refusals += 1
+        elif ev.kind == "congest_link":
+            self.driver.set_topology(
+                self.driver.topology.congested(
+                    int(a.get("src", 0)), int(a.get("dst", 1)),
+                    float(a.get("factor", 2.0)),
+                )
+            )
+        elif ev.kind == "degrade_link":
+            kw = {}
+            if "distance" in a:
+                kw["distance"] = int(a["distance"])
+            if "bandwidth" in a:
+                kw["bandwidth"] = float(a["bandwidth"])
+            self.driver.set_topology(
+                self.driver.topology.with_link(int(a.get("src", 0)), int(a.get("dst", 1)), **kw)
+            )
+        elif ev.kind == "restore_topology":
+            self.driver.set_topology(self.base_topology)
+        elif ev.kind == "cancel_storm":
+            live = [h for h in self.handles if not h.done]
+            frac = float(a.get("frac", 1.0))
+            k = max(1, int(round(frac * len(live)))) if live else 0
+            for i in self.rng.choice(len(live), size=k, replace=False) if k else ():
+                live[int(i)].cancel()
+        elif ev.kind == "write_burst":
+            self._write_random(int(a.get("blocks", 4)))
+        elif ev.kind == "out_of_slots":
+            free = [self.driver.free_slots(r) for r in range(self.spec.n_regions)]
+            fullest = int(np.argmin(free))
+            k = min(self.spec.n_blocks, max(1, free[fullest] + 2))
+            ids = self.rng.choice(self.spec.n_blocks, size=k, replace=False)
+            self._leap(ids, fullest)
+        else:  # pragma: no cover - validate() rejects unknown kinds
+            raise ValueError(f"unknown fault kind {ev.kind!r}")
+        self.events_fired.append(f"t{self.driver.stats.ticks}:{ev.kind}")
+
+    # -- the run -------------------------------------------------------------
+
+    def run(self, drain_ticks: int = 5000) -> ChaosReport:
+        spec = self.spec
+        for t in range(spec.ticks):
+            self._step_workload(t)
+            for when, ev in self.schedule:
+                if when == t:
+                    self._fire(ev)
+                    self.checker.check_all(payload=False)  # after every event
+            self.session.tick()
+            self.session.poll()
+            self.checker.check_all(payload=(t % spec.payload_every == 0))
+        completed = self.session.drain(max_ticks=drain_ticks)
+        if completed:
+            self.checker.check_final()
+        else:
+            self.checker.check_all()
+        s = self.driver.stats
+        return ChaosReport(
+            spec=spec,
+            completed=completed,
+            ticks_run=int(s.ticks),
+            checks_run=self.checker.checks_run,
+            events_fired=self.events_fired,
+            drain_refusals=self.drain_refusals,
+            handles_issued=len(self.handles),
+            blocks_requested=int(s.blocks_requested),
+            blocks_migrated=int(s.blocks_migrated),
+            blocks_forced=int(s.blocks_forced),
+            blocks_cancelled=int(s.blocks_cancelled),
+        )
+
+
+def run_scenario(spec: ScenarioSpec, sabotage: str | None = None) -> ChaosReport:
+    """Build and run one scenario; raises InvariantViolation on a breach."""
+    return ChaosDriver(spec, sabotage=sabotage).run()
+
+
+def run_with_repro(
+    spec: ScenarioSpec, repro_dir: str, sabotage: str | None = None
+) -> ChaosReport:
+    """Like :func:`run_scenario`, but a violation first serializes the spec.
+
+    Two files are written: a content-addressed ``chaos-<digest>.json`` and
+    ``last_failure.json`` (overwritten per failure — under Hypothesis
+    shrinking, the last failing run is the minimized example, so this file
+    always holds the smallest repro found).
+    """
+    try:
+        return run_scenario(spec, sabotage=sabotage)
+    except InvariantViolation as e:
+        os.makedirs(repro_dir, exist_ok=True)
+        text = spec.to_json()
+        digest = hashlib.sha256(text.encode()).hexdigest()[:12]
+        path = os.path.join(repro_dir, f"chaos-{digest}.json")
+        for p in (path, os.path.join(repro_dir, "last_failure.json")):
+            with open(p, "w") as f:
+                f.write(text + "\n")
+        detail = str(e).removeprefix(f"[{e.invariant}] ")
+        raise InvariantViolation(
+            e.invariant,
+            f"{detail} | spec serialized to {path}; replay with: "
+            f"python -m repro.chaos --replay {path}",
+        ) from e

@@ -342,7 +342,35 @@ class MigrationDriver:
         """Zero-copy promotion of already-aligned resident runs."""
         return self._dispatch.adopt_huge(group_ids)
 
+    # -- live reconfiguration ------------------------------------------------
+
+    def set_topology(self, topology) -> None:
+        """Swap the live :class:`repro.topology.NumaTopology` (or ``None``).
+
+        The budget and routing stages consult ``ctx.topology`` every tick, so
+        the swap takes effect at the next ``tick()`` — this is how link
+        degradation/congestion is injected under load (the machine changed;
+        in-flight epochs finish under the schedule they were granted).
+        ``PoolConfig`` is frozen, so the pool's static config keeps its
+        construction-time topology; the context holds the live one.
+        """
+        if topology is not None and topology.n_regions != self.ctx.pool_cfg.n_regions:
+            raise ValueError(
+                f"topology has {topology.n_regions} regions, pool has "
+                f"{self.ctx.pool_cfg.n_regions}"
+            )
+        self.ctx.topology = topology
+
     # -- introspection ---------------------------------------------------------
+
+    def introspect(self):
+        """Read-only :class:`~repro.core.pipeline.PipelineSnapshot` of the
+        host bookkeeping: free/resident/reserved/quarantined slots, every
+        in-pipeline area, the mirrors.  Everything is copied — safe to hand
+        to external validators (the chaos invariant checker)."""
+        from repro.core.pipeline.introspect import snapshot  # local: avoid cycle
+
+        return snapshot(self.ctx, self._dispatch.quarantined_slots())
 
     def host_placement(self) -> np.ndarray:
         return self.ctx.table[:, REGION].copy()

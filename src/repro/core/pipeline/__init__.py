@@ -24,6 +24,7 @@ from repro.core.pipeline.admission import AdmissionStage, busy_mask
 from repro.core.pipeline.budget import BudgetStage, TickBudget
 from repro.core.pipeline.context import PipelineContext
 from repro.core.pipeline.dispatch import DispatchStage
+from repro.core.pipeline.introspect import AreaView, PipelineSnapshot, snapshot
 from repro.core.pipeline.routing import RoutingStage
 from repro.core.pipeline.scheduler import (
     AdmissionTicket,
@@ -40,10 +41,12 @@ __all__ = [
     "AccountingStage",
     "AdmissionStage",
     "AdmissionTicket",
+    "AreaView",
     "BudgetStage",
     "DispatchStage",
     "LeapScheduler",
     "PipelineContext",
+    "PipelineSnapshot",
     "RoutingStage",
     "SamplingConfig",
     "SamplingScheduler",
@@ -53,4 +56,5 @@ __all__ = [
     "VerdictStage",
     "busy_mask",
     "make_scheduler",
+    "snapshot",
 ]

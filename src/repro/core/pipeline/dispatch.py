@@ -159,6 +159,14 @@ class DispatchStage:
                 ctx.free[r].put(old[old[:, REGION] == r, SLOT])
         self._freed = []
 
+    def quarantined_slots(self) -> np.ndarray:
+        """Copy of the current force-freed slot quarantine: ``(region, slot)``
+        rows held back until this tick's device batches dispatch.  Empty
+        between ticks; exposed (read-only) for pipeline introspection."""
+        if not self._freed:
+            return np.zeros((0, 2), dtype=np.int32)
+        return np.concatenate([f.copy() for f in self._freed]).astype(np.int32)
+
     def _next_copyable(self, skipped: set | None = None) -> Area | None:
         for a in self.ctx.active:
             if a.copied < len(a) and (skipped is None or id(a) not in skipped):

@@ -32,9 +32,19 @@ def drain_plan(driver: MigrationDriver, failed_region: int) -> dict[int, np.ndar
     round-robin across the *nearest* surviving tier until its capacity is
     exhausted, then the next tier, so an evacuation prefers fast local links
     and only touches far (e.g. CXL) regions when the near ones are full.
+
+    Blocks already claimed by a live request (queued, copying, or awaiting a
+    verdict) are not victims: admission would deduplicate them anyway, but
+    planning for them would consume surviving capacity they do not need —
+    enough, when the evacuation is already in flight, to spuriously exhaust
+    the plan.  Excluding them makes :func:`drain_region` idempotent: a
+    second call (or a call on an empty/already-draining region) plans only
+    the blocks that still genuinely sit on the failed region unclaimed.
     """
     placement = driver.host_placement()
     victims = np.nonzero(placement == failed_region)[0].astype(np.int32)
+    if len(victims):
+        victims = victims[~driver.in_migration(victims)]
     n_regions = driver.pool_cfg.n_regions
     survivors = [r for r in range(n_regions) if r != failed_region]
     free = {r: driver.free_slots(r) for r in survivors}

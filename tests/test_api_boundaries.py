@@ -31,6 +31,11 @@ EXEMPT = {
     # the mechanism itself and this scanner
     "src/repro/core",
     "tests/test_api_boundaries.py",
+    # deliberate fault injection: re-introduces historical pipeline bugs to
+    # prove the chaos InvariantChecker catches them — it must reach into the
+    # dispatch internals it breaks.  The REST of the chaos package stays
+    # scanned: the harness proper observes only through the public seam.
+    "src/repro/chaos/sabotage.py",
 }
 
 

@@ -14,6 +14,7 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.api import LeapSession
+from repro.chaos import InvariantChecker
 from repro.core import (
     LeapConfig,
     MigrationDriver,
@@ -76,15 +77,6 @@ def test_property_leap_cancel_write_interleavings(seed, n_blocks, n_regions, ops
         p = h.progress()
         assert p.committed + p.forced + p.cancelled == p.requested
         assert p.remaining == 0
-    # global accounting closes too
-    s = sess.facade.snapshot_stats()
-    assert s.blocks_migrated + s.blocks_forced + s.blocks_cancelled == s.blocks_requested
-    # no slot leaked, mirror exact, no write lost
-    used = sum(
-        cfg.slots_per_region - drv.free_slots(r) for r in range(cfg.n_regions)
-    )
-    assert used == n_blocks
-    assert drv.verify_mirror()
-    np.testing.assert_array_equal(
-        np.asarray(drv.read(np.arange(n_blocks))), expected
-    )
+    # the shared standing invariants: global accounting closure, slot
+    # conservation, mirror consistency, and no write lost (payload vs shadow)
+    InvariantChecker(drv).check_final(expected=expected)

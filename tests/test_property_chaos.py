@@ -1,0 +1,55 @@
+"""Generative chaos exploration (Hypothesis): sampled ScenarioSpecs hold
+every standing invariant, and sampled sabotage specs are always *caught*
+with a replayable serialized repro.
+
+Kept separate (importorskip) so the tier-1 suite collects without the
+optional ``hypothesis`` dev dependency; the deterministic chaos tests live
+in test_chaos.py.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="generative chaos needs hypothesis")
+from hypothesis import HealthCheck, given, settings
+
+from repro.chaos import (
+    InvariantViolation,
+    ScenarioSpec,
+    run_scenario,
+    run_with_repro,
+    sabotage_specs,
+    scenario_specs,
+)
+
+
+@settings(max_examples=15, deadline=None)
+@given(spec=scenario_specs())
+def test_generated_scenarios_hold_invariants(spec):
+    spec.validate()
+    assert ScenarioSpec.from_json(spec.to_json()) == spec
+    report = run_scenario(spec)  # raises InvariantViolation on any breach
+    assert report.completed, "generated scenario failed to drain"
+    assert (
+        report.blocks_migrated + report.blocks_forced + report.blocks_cancelled
+        == report.blocks_requested
+    )
+
+
+@settings(
+    max_examples=10,
+    deadline=None,
+    suppress_health_check=[HealthCheck.function_scoped_fixture],
+)
+@given(spec=sabotage_specs())
+def test_generated_sabotage_specs_always_caught(spec, tmp_path):
+    # Every spec in the sabotage family must trip the payload check under
+    # the re-introduced bug — were one to slip through, Hypothesis shrinks
+    # it and run_with_repro leaves the minimized spec in last_failure.json.
+    with pytest.raises(InvariantViolation) as exc:
+        run_with_repro(spec, str(tmp_path), sabotage="skip_quarantine")
+    assert exc.value.invariant == "payload"
+    repro = tmp_path / "last_failure.json"
+    assert repro.exists()
+    replayed = ScenarioSpec.from_json(repro.read_text())
+    assert replayed == spec  # the serialized repro IS the failing spec
+    assert run_scenario(replayed).completed  # fixed code passes the repro

@@ -12,6 +12,7 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
+from repro.chaos import InvariantChecker
 from repro.core import (
     LeapConfig,
     MigrationDriver,
@@ -66,13 +67,9 @@ def test_property_interleaved_writes_preserve_contents(
         steps += 1
     assert drv.done
     assert (drv.host_placement() == target).all()
-    np.testing.assert_array_equal(np.asarray(drv.read(np.arange(n_blocks))), expected)
-    assert drv.verify_mirror()
-    # slot accounting invariant
-    used = sum(
-        cfg.slots_per_region - drv.free_slots(r) for r in range(cfg.n_regions)
-    )
-    assert used == n_blocks
+    # the shared standing invariants: slot conservation, accounting closure,
+    # mirror consistency, and payload integrity against the expected copy
+    InvariantChecker(drv).check_final(expected=expected)
 
 
 @settings(max_examples=15, deadline=None)
@@ -83,12 +80,9 @@ def test_property_random_requests_slot_conservation(seed):
     cfg = PoolConfig(n_regions, 24, (2,))
     state = init_state(cfg, n_blocks, np.zeros(n_blocks, np.int32))
     drv = MigrationDriver(state, cfg, LeapConfig(initial_area_blocks=4, chunk_blocks=2))
+    checker = InvariantChecker(drv)
     for _ in range(4):
         ids = rng.choice(n_blocks, size=rng.integers(1, n_blocks + 1), replace=False)
         drv.request(ids, dst_region=int(rng.integers(0, n_regions)))
         assert drv.drain()
-    used = sum(
-        cfg.slots_per_region - drv.free_slots(r) for r in range(cfg.n_regions)
-    )
-    assert used == n_blocks
-    assert drv.verify_mirror()
+        checker.check_final()
