@@ -9,6 +9,7 @@ paper's figures); the ``derived`` column carries the figure-specific metric
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -24,6 +25,13 @@ from repro.core import (
 )
 
 ROWS = []
+
+# --trace support (benchmarks.run): when TRACING is on, every pool built via
+# make_pool records telemetry, and its recorder lands in TRACE_SESSIONS as a
+# (label, recorder) group for the per-suite Chrome trace file.  Timed numbers
+# under --trace are for inspection, not for the regression gate.
+TRACING = False
+TRACE_SESSIONS: list[tuple[str, object]] = []
 
 
 def emit(name: str, us_per_call: float, derived: str) -> dict:
@@ -94,7 +102,14 @@ def make_pool(
     data = rng.standard_normal((n_blocks, 1, elems), dtype=np.float32)
     state = leap_write(state, jnp.arange(n_blocks), jnp.asarray(data))
     jax.block_until_ready(state.pool)
-    drv = MigrationDriver(state, cfg, leap or LeapConfig())
+    leap = leap or LeapConfig()
+    if TRACING:
+        leap = dataclasses.replace(leap, telemetry=True)
+    drv = MigrationDriver(state, cfg, leap)
+    if TRACING:
+        TRACE_SESSIONS.append(
+            (f"pool{len(TRACE_SESSIONS)}:{n_blocks}x{block_kb}KB", drv.telemetry)
+        )
     if adopt and huge_factor > 1:
         drv.adopt_huge(np.arange(n_blocks // huge_factor))
     return cfg, drv, data

@@ -55,16 +55,34 @@ def _selected(only: set | None, mod_name: str, fn_name: str) -> bool:
     return mod_name in only or suite_key(mod_name, fn_name) in only
 
 
-def _write_json(outdir: str, key: str, rows, elapsed_s: float, ok: bool) -> str:
+def _write_json(
+    outdir: str, key: str, rows, elapsed_s: float, ok: bool, telemetry=None
+) -> str:
     os.makedirs(outdir, exist_ok=True)
     path = os.path.join(outdir, f"BENCH_{key}.json")
+    doc = {"suite": key, "ok": ok, "elapsed_s": elapsed_s, "rows": rows}
+    if telemetry is not None:
+        doc["telemetry"] = telemetry
     with open(path, "w") as f:
-        json.dump(
-            {"suite": key, "ok": ok, "elapsed_s": elapsed_s, "rows": rows},
-            f,
-            indent=2,
-        )
+        json.dump(doc, f, indent=2)
         f.write("\n")
+    return path
+
+
+def _write_trace(outdir: str, key: str, groups) -> str | None:
+    """Write the suite's Perfetto-loadable trace; returns its path (None:
+    nothing recorded, or the export failed — traces are best-effort)."""
+    if not groups:
+        return None
+    from repro.obs import write_chrome_trace
+
+    os.makedirs(outdir, exist_ok=True)
+    path = os.path.join(outdir, f"TRACE_{key}.json")
+    try:
+        write_chrome_trace(path, groups, other_data={"suite": key})
+    except Exception:
+        traceback.print_exc()
+        return None
     return path
 
 
@@ -83,6 +101,14 @@ def main(argv=None) -> int:
         default=".",
         help="directory for the BENCH_<suite>.json result files",
     )
+    ap.add_argument(
+        "--trace",
+        action="store_true",
+        help="record pipeline telemetry on every pool: writes a Perfetto-"
+        "loadable TRACE_<suite>.json per suite and embeds a telemetry "
+        "summary block in each BENCH_<suite>.json (timings under --trace "
+        "are for inspection, not the regression gate)",
+    )
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
     if only is not None:
@@ -98,28 +124,47 @@ def main(argv=None) -> int:
     print("name,us_per_call,derived")
     failures = 0
     ran = 0
-    for mod_name, fn_name, kw in SUITES:
-        if not _selected(only, mod_name, fn_name):
-            continue
-        ran += 1
-        key = suite_key(mod_name, fn_name)
-        start_row = len(common.ROWS)
-        t0 = time.time()
-        ok = True
-        try:
-            mod = importlib.import_module(f"benchmarks.{mod_name}")
-            getattr(mod, fn_name)(**kw)
-            print(f"# {mod_name}.{fn_name} done in {time.time() - t0:.1f}s",
-                  file=sys.stderr, flush=True)
-        except Exception:
-            failures += 1
-            ok = False
-            print(f"# {mod_name}.{fn_name} FAILED", file=sys.stderr)
-            traceback.print_exc()
-        path = _write_json(
-            args.outdir, key, common.ROWS[start_row:], time.time() - t0, ok
-        )
-        print(f"# wrote {path}", file=sys.stderr, flush=True)
+    prev_tracing = common.TRACING
+    common.TRACING = bool(args.trace)
+    try:
+        for mod_name, fn_name, kw in SUITES:
+            if not _selected(only, mod_name, fn_name):
+                continue
+            ran += 1
+            key = suite_key(mod_name, fn_name)
+            start_row = len(common.ROWS)
+            start_trace = len(common.TRACE_SESSIONS)
+            t0 = time.time()
+            ok = True
+            try:
+                mod = importlib.import_module(f"benchmarks.{mod_name}")
+                getattr(mod, fn_name)(**kw)
+                print(f"# {mod_name}.{fn_name} done in {time.time() - t0:.1f}s",
+                      file=sys.stderr, flush=True)
+            except Exception:
+                failures += 1
+                ok = False
+                print(f"# {mod_name}.{fn_name} FAILED", file=sys.stderr)
+                traceback.print_exc()
+            telemetry = None
+            if args.trace:
+                groups = common.TRACE_SESSIONS[start_trace:]
+                trace_path = _write_trace(args.outdir, key, groups)
+                if groups:
+                    from repro.obs import summarize
+
+                    telemetry = summarize(groups)
+                    telemetry["trace_file"] = trace_path
+                if trace_path:
+                    print(f"# wrote {trace_path}", file=sys.stderr, flush=True)
+            path = _write_json(
+                args.outdir, key, common.ROWS[start_row:], time.time() - t0, ok,
+                telemetry=telemetry,
+            )
+            print(f"# wrote {path}", file=sys.stderr, flush=True)
+    finally:
+        common.TRACING = prev_tracing
+        common.TRACE_SESSIONS.clear()
     if only is not None and ran == 0:
         print("# --only matched nothing", file=sys.stderr)
         return 2

@@ -89,7 +89,8 @@ def run(n_blocks=256, block_kb=64, per_tick=8):
         f";promotions={s.promotions}"
         f";huge_MB={s.bytes_copied_huge / 2**20:.1f}"
         f";retries={s.dirty_rejections}"
-        f";disp_per_tick={s.dispatches_per_tick:.2f}",
+        f";disp_per_tick={s.dispatches_per_tick:.2f}"
+        f";jit_misses={s.jit_cache_misses}",
     )
     return True
 

@@ -92,6 +92,16 @@ class PoolFacade:
         (deep enough that the per-link dict is independent too)."""
         return self._driver.stats.snapshot()
 
+    def telemetry(self):
+        """Read-only :class:`repro.obs.TelemetryView` over the driver's
+        recorder.  Everything it returns is a copy or fresh rendering, so
+        the facade stays a pure observation surface."""
+        from repro.obs import TelemetryView  # deferred: keep facade import-light
+
+        return TelemetryView(
+            self._driver.telemetry, lambda: self._driver.stats.snapshot()
+        )
+
     # -- debug invariants (read-only checks; safe to expose) ---------------
 
     def verify_mirror(self) -> bool:

@@ -84,6 +84,14 @@ class LeapHandle:
             remaining=r.remaining,
         )
 
+    def latency(self):
+        """Telemetry latency breakdown for this request (a
+        :class:`repro.obs.LatencyBreakdown`: queue vs copy time in ticks and
+        wall seconds, epochs/retries/relay hops), or None when telemetry is
+        disabled or the span was evicted.  Live requests report progress so
+        far; terminal ones are final."""
+        return self._driver.telemetry.latency(self._req.rid)
+
     @property
     def status(self) -> HandleStatus:
         r = self._req

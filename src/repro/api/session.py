@@ -19,6 +19,7 @@ import numpy as np
 from repro.api.facade import PoolFacade
 from repro.api.handle import LeapHandle
 from repro.api.policy import Move, MoveLike, PlacementPolicy, as_move
+from repro.obs import TelemetryView
 from repro.topology import spill_assignments
 
 
@@ -162,6 +163,15 @@ class LeapSession:
         return self.driver.done
 
     # -- introspection -----------------------------------------------------
+
+    def telemetry(self) -> TelemetryView:
+        """Telemetry accessor for this session's driver: buffered events,
+        exact counters, request spans, metrics (JSON / Prometheus text),
+        Chrome trace export.  Always usable — with ``LeapConfig.telemetry``
+        off it reports ``enabled=False`` and empty data."""
+        return TelemetryView(
+            self.driver.telemetry, lambda: self.driver.stats.snapshot()
+        )
 
     @property
     def done(self) -> bool:

@@ -89,6 +89,10 @@ class ChaosDriver:
             budget_blocks_per_tick=spec.budget_blocks_per_tick,
             max_attempts_before_force=spec.max_attempts_before_force,
             demote_after_attempts=spec.demote_after_attempts,
+            # Always record under chaos: a failing run dumps its trace next
+            # to the repro spec, and the drift property test replays the
+            # event log against MigrationStats.
+            telemetry=True,
         )
         self.driver = MigrationDriver(state, pool_cfg, cfg, scheduler=spec.scheduler)
         if spec.adopt_huge:
@@ -242,13 +246,16 @@ def run_with_repro(
 ) -> ChaosReport:
     """Like :func:`run_scenario`, but a violation first serializes the spec.
 
-    Two files are written: a content-addressed ``chaos-<digest>.json`` and
+    Three files are written: a content-addressed ``chaos-<digest>.json``,
     ``last_failure.json`` (overwritten per failure — under Hypothesis
     shrinking, the last failing run is the minimized example, so this file
-    always holds the smallest repro found).
+    always holds the smallest repro found), and — since every chaos driver
+    runs with telemetry on — ``chaos-<digest>-trace.json``, the Perfetto
+    timeline of the failing run up to the violation.
     """
+    chaos = ChaosDriver(spec, sabotage=sabotage)
     try:
-        return run_scenario(spec, sabotage=sabotage)
+        return chaos.run()
     except InvariantViolation as e:
         os.makedirs(repro_dir, exist_ok=True)
         text = spec.to_json()
@@ -257,9 +264,14 @@ def run_with_repro(
         for p in (path, os.path.join(repro_dir, "last_failure.json")):
             with open(p, "w") as f:
                 f.write(text + "\n")
+        trace_path = os.path.join(repro_dir, f"chaos-{digest}-trace.json")
+        try:
+            chaos.session.telemetry().write_trace(trace_path, label=f"chaos-{digest}")
+        except Exception:  # the spec file is the repro; a trace is best-effort
+            trace_path = "(trace export failed)"
         detail = str(e).removeprefix(f"[{e.invariant}] ")
         raise InvariantViolation(
             e.invariant,
-            f"{detail} | spec serialized to {path}; replay with: "
-            f"python -m repro.chaos --replay {path}",
+            f"{detail} | spec serialized to {path} (trace: {trace_path}); "
+            f"replay with: python -m repro.chaos --replay {path}",
         ) from e

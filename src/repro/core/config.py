@@ -35,3 +35,8 @@ class LeapConfig:
     link_blocks_per_tick: int | None = None  # per-link block budget at bandwidth 1.0
     # (None: defaults to budget_blocks_per_tick — one full-speed link can
     # absorb the whole tick budget; slower links get proportionally less)
+    # Telemetry (repro.obs): off by default — the pipeline then carries the
+    # shared NullRecorder and pays only attribute lookups per tick.
+    telemetry: bool = False
+    telemetry_events: int = 65536  # event ring capacity (oldest evicted)
+    telemetry_requests: int = 1024  # resolved request spans retained (LRU)

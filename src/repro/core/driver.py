@@ -60,6 +60,7 @@ from repro.core.state import (
     leap_write_rows,
 )
 from repro.core.stats import MigrationStats, RequestState
+from repro.obs import make_recorder
 from repro.pool import BuddyAllocator, PromotionPolicy, TwoLevelTable
 
 __all__ = [
@@ -128,6 +129,7 @@ class MigrationDriver:
             tiers=tiers,
             promotion=promotion,
             last_write=last_write,
+            telemetry=make_recorder(cfg),
         )
         # Stage wiring (construction order follows the data flow).
         self._accounting = AccountingStage(self.ctx)
@@ -173,6 +175,11 @@ class MigrationDriver:
     @property
     def stats(self) -> MigrationStats:
         return self.ctx.stats
+
+    @property
+    def telemetry(self):
+        """The context's recorder (``NULL_RECORDER`` when telemetry is off)."""
+        return self.ctx.telemetry
 
     @property
     def tiers(self):
@@ -297,13 +304,23 @@ class MigrationDriver:
         """
         ctx = self.ctx
         ctx.stats.ticks += 1
-        self._verdict.harvest(block=False)
-        self._dispatch.commit_ready()
-        self._dispatch.run_tick(self._budget.open_tick())
-        if ctx.cfg.promote_per_tick and ctx.tiers is not None:
-            for g in self.promote_candidates(ctx.cfg.promote_per_tick):
-                self.promote_group(g)
-        ctx.stats.jit_cache_misses = migrator.program_cache_size() - self._cache_baseline
+        ctx.telemetry.begin_tick(ctx.stats.ticks)
+        misses_before = ctx.stats.jit_cache_misses
+        with ctx.telemetry.stage("tick"):
+            self._verdict.harvest(block=False)
+            self._dispatch.commit_ready()
+            self._dispatch.run_tick(self._budget.open_tick())
+            if ctx.cfg.promote_per_tick and ctx.tiers is not None:
+                for g in self.promote_candidates(ctx.cfg.promote_per_tick):
+                    self.promote_group(g)
+            ctx.stats.jit_cache_misses = (
+                migrator.program_cache_size() - self._cache_baseline
+            )
+        if ctx.telemetry.enabled and ctx.stats.jit_cache_misses != misses_before:
+            # attribute compilation stalls to the tick that paid for them
+            ctx.telemetry.event(
+                "jit", "jit_miss", n=ctx.stats.jit_cache_misses - misses_before
+            )
 
     def poll(self, block: bool = False) -> None:
         """Harvest commit verdicts: opportunistically, or blocking until all

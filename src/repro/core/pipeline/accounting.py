@@ -31,6 +31,7 @@ class AccountingStage:
         req = RequestState(rid=rid, dst_region=dst_region, priority=priority)
         req.callbacks.extend(callbacks)
         ctx.requests[rid] = req
+        ctx.telemetry.request_submitted(rid, dst_region, priority)
         return req
 
     def get(self, rid: int) -> RequestState | None:
@@ -58,7 +59,7 @@ class AccountingStage:
         marks and account them as cancelled."""
         ctx = self.ctx
         ctx.migrating[ids] = False
-        ctx.stats.blocks_cancelled += len(ids)
+        ctx.count("blocks_cancelled", len(ids), rid=area.request_id)
         req = ctx.requests.get(area.request_id)
         if req is None:
             return
@@ -70,7 +71,7 @@ class AccountingStage:
         """Account ``n`` blocks dropped straight out of the queue (cancel)."""
         if n:
             req.cancelled += n
-            self.ctx.stats.blocks_cancelled += n
+            self.ctx.count("blocks_cancelled", n, rid=req.rid)
         if req.done:
             self.fire_callbacks(req)
 
@@ -85,6 +86,9 @@ class AccountingStage:
         # registry so a long-running server does not accumulate one record
         # per request forever.  Handles keep working — they hold the
         # RequestState object itself, not the registry entry.
+        self.ctx.telemetry.request_resolved(
+            req.rid, req.committed, req.forced, req.cancelled, req.requested
+        )
         callbacks, req.callbacks = list(req.callbacks), []
         for cb in callbacks:
             cb(req)

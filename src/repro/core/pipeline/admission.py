@@ -61,6 +61,10 @@ class AdmissionStage:
         before lower ones.  ``ticket`` overrides the scheduler's default
         admission stamp (escalation / fresh-alloc / skip-busy).
         """
+        with self.ctx.telemetry.stage("admission.submit"):
+            return self._submit(block_ids, dst_region, priority, callbacks, ticket)
+
+    def _submit(self, block_ids, dst_region, priority, callbacks, ticket) -> RequestState:
         ctx = self.ctx
         if ticket is None:
             ticket = ctx.scheduler.admission_ticket()
@@ -95,7 +99,7 @@ class AdmissionStage:
         block_ids = block_ids[mask]
         if len(block_ids):
             ctx.migrating[block_ids] = True
-            ctx.stats.blocks_requested += len(block_ids)
+            ctx.count("blocks_requested", len(block_ids), rid=req.rid)
             # Group by current source region (areas are single-source so the
             # ppermute backend has static endpoints).
             srcs = ctx.table[block_ids, REGION]
@@ -111,6 +115,7 @@ class AdmissionStage:
                     fresh_alloc=ticket.fresh_alloc,
                 )
         req.requested = enqueued + len(block_ids)
+        ctx.telemetry.request_phase(req.rid, "ADMITTED", n=req.requested)
         self.accounting.finish_if_done(req)
         return req
 
@@ -121,10 +126,11 @@ class AdmissionStage:
         if src == dst_region or ctx.migrating[members].any():
             return 0
         ctx.migrating[members] = True
-        ctx.stats.blocks_requested += len(members)
+        ctx.count("blocks_requested", len(members), rid=rid, huge=True)
         ctx.queue.append(
             Area(members, src, dst_region, huge=True, request_id=rid, priority=priority)
         )
+        ctx.telemetry.request_phase(rid, "ROUTED", n=1, src=src, dst=dst_region, huge=True)
         return len(members)
 
     # -- cancel ------------------------------------------------------------
@@ -147,8 +153,9 @@ class AdmissionStage:
             return 0  # unknown, already terminal (pruned), or already cancelled
         req.cancel_requested = True
         n = 0
-        for area in ctx.queue.remove_request(rid):
-            ctx.migrating[area.block_ids] = False
-            n += len(area)
-        self.accounting.drop_queued(req, n)
+        with ctx.telemetry.stage("admission.cancel", rid=rid):
+            for area in ctx.queue.remove_request(rid):
+                ctx.migrating[area.block_ids] = False
+                n += len(area)
+            self.accounting.drop_queued(req, n)
         return n

@@ -37,10 +37,11 @@ class BudgetStage:
     # -- opening a tick ----------------------------------------------------
 
     def open_tick(self) -> TickBudget:
-        return TickBudget(
-            blocks=self.ctx.scheduler.tick_budget(self.ctx.cfg),
-            links=self._link_budgets(),
-        )
+        with self.ctx.telemetry.stage("budget.open_tick"):
+            return TickBudget(
+                blocks=self.ctx.scheduler.tick_budget(self.ctx.cfg),
+                links=self._link_budgets(),
+            )
 
     def _link_budgets(self) -> dict | None:
         """Fresh per-tick ``(src, dst) -> [blocks_left, opens_left, cap]``
@@ -75,7 +76,9 @@ class BudgetStage:
             # moves on to areas crossing other links.
             n = min(n, link[0])
             if n == 0:
-                self.ctx.stats.deferred_congested += 1
+                self.ctx.count(
+                    "deferred_congested", 1, src=area.src_region, dst=area.dst_region
+                )
                 return 0
             link[0] -= n
         self.charge_link(area.src_region, area.dst_region, n)
@@ -97,7 +100,9 @@ class BudgetStage:
             if link[0] == link[2] and need > link[2]:
                 link[0] = 0  # whole-tick monopoly of this link
             else:
-                self.ctx.stats.deferred_congested += 1
+                self.ctx.count(
+                    "deferred_congested", 1, src=area.src_region, dst=area.dst_region
+                )
                 return 0
         elif link is not None:
             link[0] -= need
@@ -113,7 +118,9 @@ class BudgetStage:
         """
         link = tb.link(area.src_region, area.dst_region)
         if link is not None and (link[0] <= 0 or link[1] <= 0):
-            self.ctx.stats.deferred_congested += 1
+            self.ctx.count(
+                "deferred_congested", 1, src=area.src_region, dst=area.dst_region
+            )
             return False
         return True
 

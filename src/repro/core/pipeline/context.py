@@ -24,6 +24,7 @@ from repro.core.config import LeapConfig
 from repro.core.queues import AreaQueue, CommitBatch
 from repro.core.state import REGION, SLOT, LeapState, PoolConfig
 from repro.core.stats import MigrationStats, RequestState
+from repro.obs import NULL_RECORDER
 
 
 @dataclasses.dataclass
@@ -37,6 +38,7 @@ class PipelineContext:
     topology: Any = None  # NumaTopology, or None (uniform links)
     scheduler: Any = None  # SchedulerPolicy (set by the driver)
     stats: MigrationStats = dataclasses.field(default_factory=MigrationStats)
+    telemetry: Any = NULL_RECORDER  # TelemetryRecorder | NullRecorder
     # Host mirrors (the driver performs every allocation/remap, so these
     # stay exact without device round-trips).
     table: np.ndarray | None = None  # [n_blocks, (region, slot)] exact mirror
@@ -55,6 +57,17 @@ class PipelineContext:
     # callbacks fire (handles keep their own reference).
     requests: dict[int, RequestState] = dataclasses.field(default_factory=dict)
     next_rid: int = 0
+
+    def count(self, name: str, n: int = 1, **args) -> None:
+        """Increment ``stats.<name>`` and mirror it into the telemetry log.
+
+        The single write path for pipeline counters: stages never touch
+        ``stats`` and the recorder separately, so the event log and the
+        accounting cannot drift (tested property: replayed telemetry totals
+        equal ``MigrationStats`` on every scenario).
+        """
+        setattr(self.stats, name, getattr(self.stats, name) + n)
+        self.telemetry.count(name, n, **args)
 
     # -- host-mirror primitives (shared by dispatch and verdict) -----------
 
@@ -89,4 +102,4 @@ class PipelineContext:
         region, start = (int(x) for x in self.tiers.huge_loc[g])
         self.free[region].split_allocated(start)
         self.tiers.demote(g)
-        self.stats.demotions += 1
+        self.count("demotions", 1, group=g)

@@ -51,19 +51,24 @@ class DispatchStage:
         the paper's race (its footnote 1: a write can land after the copy
         but before the remap)."""
         ctx = self.ctx
-        ready = [a for a in ctx.active if a.copied == len(a)]
-        if ctx.cfg.fused_dispatch:
-            self._dispatch_commit_batch([a for a in ready if not a.huge])
-            self._dispatch_commit_groups([a for a in ready if a.huge])
-        else:
-            for area in ready:
-                if area.huge:
-                    self._dispatch_commit_groups([area])
-                else:
-                    self._dispatch_commit(area)
+        with ctx.telemetry.stage("dispatch.commit_ready"):
+            ready = [a for a in ctx.active if a.copied == len(a)]
+            if ctx.cfg.fused_dispatch:
+                self._dispatch_commit_batch([a for a in ready if not a.huge])
+                self._dispatch_commit_groups([a for a in ready if a.huge])
+            else:
+                for area in ready:
+                    if area.huge:
+                        self._dispatch_commit_groups([area])
+                    else:
+                        self._dispatch_commit(area)
 
     def run_tick(self, tb: TickBudget) -> None:
         """Spend the tick budget: advance open epochs, open new ones."""
+        with self.ctx.telemetry.stage("dispatch.run_tick"):
+            self._run_tick(tb)
+
+    def _run_tick(self, tb: TickBudget) -> None:
         ctx = self.ctx
         fused = ctx.cfg.fused_dispatch
         skipped: set[int] = set()  # active areas deferred this tick (link dry)
@@ -147,11 +152,18 @@ class DispatchStage:
             # forces are QUARANTINED until the flush below: no open in this
             # tick can hand a force's still-unread source slot to another
             # area as a zero/force/copy destination.
-            self._dispatch_begin_batch(opened)
-            self._dispatch_zero_batch(zeros)
-            self._dispatch_force_batch(forced)
-            self._dispatch_copy_batch(plan)
-            self._dispatch_copy_runs(run_plan)
+            with ctx.telemetry.stage(
+                "dispatch.device",
+                opened=len(opened),
+                forced=len(forced),
+                copy_chunks=len(plan),
+                huge_runs=len(run_plan),
+            ):
+                self._dispatch_begin_batch(opened)
+                self._dispatch_zero_batch(zeros)
+                self._dispatch_force_batch(forced)
+                self._dispatch_copy_batch(plan)
+                self._dispatch_copy_runs(run_plan)
         # End of tick: every program that reads a forced area's old source
         # slots is dispatched; release them for the next tick's allocations.
         for old in self._freed:
@@ -247,9 +259,16 @@ class DispatchStage:
             # terminate), but its traffic is still accounted to the link.
             # (Never a relay hop here — escalation converted it to direct
             # above — so the per-block count is exact, not doubled.)
-            ctx.stats.bytes_copied += len(area) * ctx.pool_cfg.block_bytes
-            ctx.stats.blocks_forced += len(area)
+            ctx.count("bytes_copied", len(area) * ctx.pool_cfg.block_bytes)
+            ctx.count("blocks_forced", len(area), rid=area.request_id)
             self.budget.charge_link(area.src_region, area.dst_region, len(area))
+            ctx.telemetry.request_phase(
+                area.request_id,
+                "EPOCH_OPEN",
+                n=len(area),
+                attempts=area.attempts,
+                forced=True,
+            )
             if cfg.fused_dispatch:
                 forced.append(area)  # device dispatch batched at end of tick
             else:
@@ -259,14 +278,17 @@ class DispatchStage:
                     jax.numpy.asarray(area.dst_slots),
                     int(area.dst_region),
                 )
-                ctx.stats.dispatches += 1
+                ctx.count("dispatches", 1, program="force_migrate")
             self._finalize_success(area)
             return True
+        ctx.telemetry.request_phase(
+            area.request_id, "EPOCH_OPEN", n=len(area), attempts=area.attempts
+        )
         if cfg.fused_dispatch:
             opened.append(area)  # begin batched at end of tick, before copies
         else:
             ctx.state = migrator.begin_area(ctx.state, jax.numpy.asarray(area.block_ids))
-            ctx.stats.dispatches += 1
+            ctx.count("dispatches", 1, program="begin_area")
         ctx.active.append(area)
         return True
 
@@ -293,11 +315,14 @@ class DispatchStage:
             return False  # caller re-queues (tick sets it aside, tries others)
         area.dst_slots = start + np.arange(ctx.pool_cfg.huge_factor, dtype=np.int32)
         area.copied = 0
+        ctx.telemetry.request_phase(
+            area.request_id, "EPOCH_OPEN", n=len(area), attempts=area.attempts, huge=True
+        )
         if ctx.cfg.fused_dispatch:
             opened.append(area)  # members share the tick's begin batch
         else:
             ctx.state = migrator.begin_area(ctx.state, jax.numpy.asarray(area.block_ids))
-            ctx.stats.dispatches += 1
+            ctx.count("dispatches", 1, program="begin_area")
         ctx.active.append(area)
         return True
 
@@ -333,7 +358,7 @@ class DispatchStage:
         ctx.state = migrator.zero_fill(
             ctx.state, jax.numpy.asarray(slots), int(area.dst_region)
         )
-        ctx.stats.dispatches += 1
+        ctx.count("dispatches", 1, program="zero_fill")
 
     def _dispatch_zero_batch(self, zeros: list[Area]) -> None:
         """One zero-fill program per destination region covers every
@@ -348,7 +373,7 @@ class DispatchStage:
         for region, slot_lists in by_region.items():
             (slots,) = self._pad(np.concatenate(slot_lists))
             ctx.state = migrator.zero_fill(ctx.state, jax.numpy.asarray(slots), region)
-            ctx.stats.dispatches += 1
+            ctx.count("dispatches", 1, program="zero_fill")
 
     def _dispatch_begin_batch(self, opened: list[Area]) -> None:
         if not opened:
@@ -356,7 +381,7 @@ class DispatchStage:
         ctx = self.ctx
         (ids,) = self._pad(np.concatenate([a.block_ids for a in opened]))
         ctx.state = migrator.begin_areas(ctx.state, jax.numpy.asarray(ids))
-        ctx.stats.dispatches += 1
+        ctx.count("dispatches", 1, program="begin_areas")
 
     def _dispatch_force_batch(self, forced: list[Area]) -> None:
         if not forced:
@@ -374,7 +399,7 @@ class DispatchStage:
             jax.numpy.asarray(regions),
             jax.numpy.asarray(slots),
         )
-        ctx.stats.dispatches += 1
+        ctx.count("dispatches", 1, program="force_areas")
 
     def _dispatch_copy_batch(
         self, plan: list[tuple[Area, np.ndarray, np.ndarray]]
@@ -383,7 +408,7 @@ class DispatchStage:
             return
         ctx = self.ctx
         n_blocks = sum(len(ids) for _, ids, _ in plan)
-        ctx.stats.bytes_copied += n_blocks * ctx.pool_cfg.block_bytes
+        ctx.count("bytes_copied", n_blocks * ctx.pool_cfg.block_bytes)
         if ctx.cfg.backend == "ppermute":
             self._dispatch_copy_batch_ppermute(plan)
             return
@@ -404,7 +429,7 @@ class DispatchStage:
             jax.numpy.asarray(dst_flat),
             impl=ctx.cfg.copy_impl,
         )
-        ctx.stats.dispatches += 1
+        ctx.count("dispatches", 1, program="fused_copy")
 
     def _dispatch_copy_batch_ppermute(
         self, plan: list[tuple[Area, np.ndarray, np.ndarray]]
@@ -433,7 +458,7 @@ class DispatchStage:
                 ctx.mesh,
                 impl=ctx.cfg.copy_impl,
             )
-            ctx.stats.dispatches += 1
+            ctx.count("dispatches", 1, program="fused_copy_ppermute")
 
     def _dispatch_commit_batch(self, ready: list[Area]) -> None:
         if not ready:
@@ -452,7 +477,7 @@ class DispatchStage:
             jax.numpy.asarray(p_regions),
             jax.numpy.asarray(p_slots),
         )
-        ctx.stats.dispatches += 1
+        ctx.count("dispatches", 1, program="commit_areas")
         for a in ready:
             ctx.active.remove(a)
         ctx.pending.append(CommitBatch(ready, offsets, verdict))
@@ -468,8 +493,8 @@ class DispatchStage:
         G = ctx.pool_cfg.huge_factor
         s_per = ctx.pool_cfg.slots_per_region
         nbytes = len(run_plan) * G * ctx.pool_cfg.block_bytes
-        ctx.stats.bytes_copied += nbytes
-        ctx.stats.bytes_copied_huge += nbytes
+        ctx.count("bytes_copied", nbytes)
+        ctx.count("bytes_copied_huge", nbytes)
         firsts = np.asarray([a.block_ids[0] for a in run_plan])
         src = (ctx.table[firsts, REGION] * s_per + ctx.table[firsts, SLOT]).astype(np.int32)
         dst = np.asarray(
@@ -483,7 +508,7 @@ class DispatchStage:
             run=G,
             impl=ctx.cfg.copy_impl,
         )
-        ctx.stats.dispatches += 1
+        ctx.count("dispatches", 1, program="fused_copy_runs")
 
     def _dispatch_commit_groups(self, ready: list[Area]) -> None:
         """All-or-nothing commit of every copy-complete huge area (one program,
@@ -507,7 +532,7 @@ class DispatchStage:
             jax.numpy.asarray(starts),
             group=G,
         )
-        ctx.stats.dispatches += 1
+        ctx.count("dispatches", 1, program="commit_groups")
         for a in ready:
             ctx.active.remove(a)
         ctx.pending.append(
@@ -537,8 +562,8 @@ class DispatchStage:
                 jax.numpy.asarray(slots),
                 int(area.dst_region),
             )
-        ctx.stats.dispatches += 1
-        ctx.stats.bytes_copied += len(ids) * ctx.pool_cfg.block_bytes
+        ctx.count("dispatches", 1, program="copy_chunk")
+        ctx.count("bytes_copied", len(ids) * ctx.pool_cfg.block_bytes)
 
     def _dispatch_commit(self, area: Area) -> None:
         ctx = self.ctx
@@ -548,7 +573,7 @@ class DispatchStage:
             jax.numpy.asarray(area.dst_slots),
             int(area.dst_region),
         )
-        ctx.stats.dispatches += 1
+        ctx.count("dispatches", 1, program="commit_area")
         ctx.active.remove(area)
         ctx.pending.append(CommitBatch([area], np.asarray([0, len(area)]), verdict))
 
@@ -592,14 +617,14 @@ class DispatchStage:
             jax.numpy.asarray(np.full(G, region, np.int32)),
             jax.numpy.asarray(dst_slots),
         )
-        ctx.stats.dispatches += 1
-        ctx.stats.bytes_copied += G * ctx.pool_cfg.block_bytes
+        ctx.count("dispatches", 1, program="force_areas")
+        ctx.count("bytes_copied", G * ctx.pool_cfg.block_bytes)
         # take_run left the destination live as one huge allocation; the old
         # scattered member slots free individually and coalesce.
         ctx.free[region].put(ctx.table[members, SLOT])
         ctx.table[members, SLOT] = dst_slots
         ctx.tiers.promote(g, region, start)
-        ctx.stats.promotions += 1
+        ctx.count("promotions", 1, group=g)
         return True
 
     def adopt_huge(self, group_ids) -> int:

@@ -77,8 +77,11 @@ class RoutingStage:
             for a in areas:
                 a.attempts = ctx.cfg.max_attempts_before_force
         if final >= 0:
-            ctx.stats.multi_hop_areas += len(areas)
+            ctx.count("multi_hop_areas", len(areas), src=src, via=first_dst, dst=dst_region)
         ctx.queue.extend(areas)
+        ctx.telemetry.request_phase(
+            rid, "ROUTED", n=len(areas), src=src, dst=first_dst, final=final
+        )
 
     def relay_onward(self, area: Area, ids: np.ndarray) -> None:
         """Second hop of a relayed area: blocks that just arrived at the
@@ -102,3 +105,11 @@ class RoutingStage:
         for sub in subs:
             sub.attempts = area.attempts
         ctx.queue.extend(subs)
+        ctx.telemetry.request_phase(
+            area.request_id,
+            "RELAY",
+            n=len(subs),
+            via=area.dst_region,
+            dst=area.final_dst,
+            blocks=len(ids),
+        )

@@ -37,21 +37,28 @@ class VerdictStage:
         """Process every pending commit verdict already on the host (or all
         of them, synchronizing, when ``block``)."""
         ctx = self.ctx
-        still = []
-        for batch in ctx.pending:
-            ready = block
-            if not ready:
-                try:
-                    ready = batch.verdict.is_ready()
-                except AttributeError:  # pragma: no cover - older jax
-                    ready = True
-            if not ready:
-                still.append(batch)
-                continue
-            packed = np.asarray(batch.verdict)
-            for area, start, end in zip(batch.areas, batch.offsets, batch.offsets[1:]):
-                self._process(area, packed[start:end])
-        ctx.pending = still
+        if not ctx.pending:
+            return
+        with ctx.telemetry.stage("verdict.harvest", blocking=block):
+            still = []
+            for batch in ctx.pending:
+                ready = block
+                if not ready:
+                    try:
+                        ready = batch.verdict.is_ready()
+                    except AttributeError:  # pragma: no cover - older jax
+                        ready = True
+                if not ready:
+                    still.append(batch)
+                    continue
+                # Sync point: materializing the verdict blocks until the
+                # device produced it (opportunistic harvests already saw
+                # is_ready(), so only block=True pays a real wait here).
+                with ctx.telemetry.stage("verdict.sync", blocking=block):
+                    packed = np.asarray(batch.verdict)
+                for area, start, end in zip(batch.areas, batch.offsets, batch.offsets[1:]):
+                    self._process(area, packed[start:end])
+            ctx.pending = still
 
     # -- per-area resolution -----------------------------------------------
 
@@ -61,6 +68,9 @@ class VerdictStage:
             self._process_huge(area, bool(dirty[0]))
             return
         clean = ~dirty
+        ctx.telemetry.request_phase(
+            area.request_id, "VERDICT", n=len(area), dirty=int(dirty.sum())
+        )
         # Clean blocks: the remap took effect on device; mirror it.
         clean_ids = area.block_ids[clean]
         ctx.remap_host(clean_ids, area.dst_region, area.dst_slots[clean])
@@ -73,20 +83,21 @@ class VerdictStage:
             else:
                 self.routing.relay_onward(area, clean_ids)
         else:
-            ctx.stats.blocks_migrated += int(clean.sum())
+            ctx.count("blocks_migrated", int(clean.sum()), rid=area.request_id)
             self.accounting.credit(area, committed=int(clean.sum()))
         # Dirty blocks: stale copies; free reserved slots and requeue smaller —
         # unless the owning request was cancelled, in which case the in-flight
         # epoch ends here: drop the dirty remainder instead of retrying.
         n_dirty = int(dirty.sum())
         if n_dirty:
-            ctx.stats.dirty_rejections += n_dirty
+            ctx.count("dirty_rejections", n_dirty, rid=area.request_id)
+            ctx.telemetry.request_phase(area.request_id, "RETRY", n=n_dirty)
             ctx.free[area.dst_region].put(area.dst_slots[dirty])
             if self.accounting.cancelled(area):
                 self.accounting.drop_blocks(area, area.block_ids[dirty])
                 return
             subs = split_area(area, dirty, ctx.cfg.reduction_factor, ctx.cfg.min_area_blocks)
-            ctx.stats.splits += max(0, len(subs) - 1)
+            ctx.count("splits", max(0, len(subs) - 1))
             ctx.queue.extend(subs)
 
     def _process_huge(self, area: Area, is_dirty: bool) -> None:
@@ -94,6 +105,9 @@ class VerdictStage:
         ctx = self.ctx
         G = ctx.pool_cfg.huge_factor
         g = int(area.block_ids[0]) // G
+        ctx.telemetry.request_phase(
+            area.request_id, "VERDICT", n=G, dirty=G if is_dirty else 0, huge=True
+        )
         if not is_dirty:
             ids = area.block_ids
             old_region = int(ctx.table[ids[0], REGION])
@@ -103,15 +117,16 @@ class VerdictStage:
             ctx.table[ids, SLOT] = area.dst_slots
             ctx.migrating[ids] = False
             ctx.tiers.relocate(g, area.dst_region, int(area.dst_slots[0]))
-            ctx.stats.blocks_migrated += G
-            ctx.stats.huge_areas_committed += 1
+            ctx.count("blocks_migrated", G, rid=area.request_id, huge=True)
+            ctx.count("huge_areas_committed", 1, group=g)
             self.accounting.credit(area, committed=G)
             return
         # Rejected: a member was written during the run's copy epoch.  Free
         # the reserved destination run and either retry the run whole or —
         # after demote_after_attempts rejections (sustained write pressure) —
         # split the huge block and retry at small granularity (paper §4.2).
-        ctx.stats.dirty_rejections += G
+        ctx.count("dirty_rejections", G, rid=area.request_id, huge=True)
+        ctx.telemetry.request_phase(area.request_id, "RETRY", n=G, huge=True)
         ctx.free[area.dst_region].free_run(int(area.dst_slots[0]))
         area.attempts += 1
         area.dst_slots = None
@@ -121,7 +136,7 @@ class VerdictStage:
         if area.attempts >= ctx.cfg.demote_after_attempts:
             ctx.demote_group(g)
             subs = demote_area(area, ctx.cfg.reduction_factor, ctx.cfg.min_area_blocks)
-            ctx.stats.splits += max(0, len(subs) - 1)
+            ctx.count("splits", max(0, len(subs) - 1))
             ctx.queue.extend(subs)
         else:
             ctx.queue.append(area)

@@ -9,6 +9,7 @@ of :class:`RequestState` credit.
 
 from __future__ import annotations
 
+import copy
 import dataclasses
 
 
@@ -45,9 +46,11 @@ class MigrationStats:
         return self.dispatches / self.ticks if self.ticks else 0.0
 
     def snapshot(self) -> "MigrationStats":
-        """Independent copy (the per-link dict included) — what the sealed
-        facade hands out, so observers can't mutate live accounting."""
-        return dataclasses.replace(self, bytes_per_link=dict(self.bytes_per_link))
+        """Fully independent copy — what the sealed facade hands out, so
+        observers can't mutate live accounting.  A deep copy, not a
+        field-by-field one: any container field added later is covered
+        automatically instead of silently aliasing the live object."""
+        return copy.deepcopy(self)
 
 
 @dataclasses.dataclass

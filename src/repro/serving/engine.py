@@ -163,6 +163,8 @@ class PagedEngine:
             ]
         self.seqs: dict[int, Sequence] = {}
         self._next_sid = 0
+        # sid -> the handle of its latest rebalance (latency attribution)
+        self._rebalance_handles: dict[int, LeapHandle] = {}
 
     # -- admission ---------------------------------------------------------------
 
@@ -351,14 +353,32 @@ class PagedEngine:
         # declared home or wait for capacity there — reroute=False so the
         # session never spills them to neighbouring regions, and the single
         # returned handle tracks the whole sequence move.
-        for handle in self.session.apply(self, reroute=False):
-            if handle.tag == sid:
-                return handle
-        # Every page already home: issue a vacuous (instantly-complete) handle
-        # so callers always get a future to wait on.
-        return self.session.leap(
-            np.asarray(seq.block_ids, np.int32), dst_region, tag=sid
-        )
+        handle = None
+        for h in self.session.apply(self, reroute=False):
+            if h.tag == sid:
+                handle = h
+                break
+        if handle is None:
+            # Every page already home: issue a vacuous (instantly-complete)
+            # handle so callers always get a future to wait on.
+            handle = self.session.leap(
+                np.asarray(seq.block_ids, np.int32), dst_region, tag=sid
+            )
+        self._rebalance_handles[sid] = handle
+        return handle
+
+    def rebalance_latency(self, sid: int):
+        """Latency breakdown of ``sid``'s latest :meth:`rebalance` (a
+        :class:`repro.obs.LatencyBreakdown`), or None when the sequence was
+        never rebalanced or telemetry is off.  Released sequences keep their
+        last attribution until the engine is dropped."""
+        handle = self._rebalance_handles.get(sid)
+        return handle.latency() if handle is not None else None
+
+    def telemetry(self):
+        """The KV pool's :class:`repro.obs.TelemetryView` (same recorder the
+        session exposes — decode-side rebalances land in the same timeline)."""
+        return self.session.telemetry()
 
     def tick(self) -> None:
         self.session.tick()

@@ -173,6 +173,24 @@ def test_sabotage_is_caught_with_replayable_repro(tmp_path):
     assert run_scenario(replayed).completed  # and passes on the fixed code
 
 
+def test_sabotage_failure_dumps_a_loadable_trace(tmp_path):
+    # Chaos drivers always record telemetry, so a violation leaves a
+    # Perfetto-loadable timeline of the run next to the serialized spec,
+    # and the raised message points at both files.
+    from repro.obs import validate_chrome_trace
+
+    with pytest.raises(InvariantViolation) as exc:
+        run_with_repro(SABOTAGE_SPEC, str(tmp_path), sabotage="skip_quarantine")
+    traces = list(tmp_path.glob("chaos-*-trace.json"))
+    assert len(traces) == 1
+    assert traces[0].name in str(exc.value)
+    trace = json.loads(traces[0].read_text())
+    validate_chrome_trace(trace)
+    evs = trace["traceEvents"]
+    assert any(e["ph"] == "X" and e["name"] == "tick" for e in evs)
+    assert any(e.get("cat") == "request" for e in evs)
+
+
 def test_cli_replay_exit_codes(tmp_path):
     spec_path = tmp_path / "spec.json"
     spec_path.write_text(SABOTAGE_SPEC.to_json())

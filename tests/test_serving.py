@@ -158,5 +158,32 @@ def test_rebalance_returns_handle_and_engine_is_a_policy(setup):
     assert eng.driver.verify_mirror()
 
 
+def test_rebalance_latency_attribution(setup):
+    """With telemetry on, the engine attributes per-sequence rebalance
+    latency from the KV pool's recorder; off, both accessors degrade to
+    None/disabled rather than erroring."""
+    cfg, params = setup
+    eng = _engine(cfg, params, leap=LeapConfig(telemetry=True))
+    sid = eng.admit(np.arange(8) % cfg.vocab_size)
+    assert eng.rebalance_latency(sid) is None  # never rebalanced yet
+    h = eng.rebalance(sid, dst_region=1)
+    assert h.wait()
+    lat = eng.rebalance_latency(sid)
+    assert lat is not None and lat.rid == h.request_id
+    assert lat.outcome == "COMMITTED"
+    assert lat.requested == len(eng.seqs[sid].block_ids)
+    assert lat.ticks_total >= 0 and lat.wall_s >= 0
+    view = eng.telemetry()
+    assert view.enabled
+    assert view.counters()["blocks_migrated"] == eng.driver.stats.blocks_migrated
+
+    eng_off = _engine(cfg, params)  # telemetry defaults off
+    sid2 = eng_off.admit(np.arange(8) % cfg.vocab_size)
+    h2 = eng_off.rebalance(sid2, dst_region=1)
+    assert h2.wait()
+    assert not eng_off.telemetry().enabled
+    assert eng_off.rebalance_latency(sid2) is None
+
+
 # Hypothesis property test over arbitrary decode/tick/rebalance schedules:
 # see test_property_serving.py (guarded by pytest.importorskip("hypothesis")).
