@@ -41,6 +41,7 @@ SUITES = [
     ("fig9_dispatch", "run", {}),
     ("fig10_topology", "run", {}),
     ("serving_rebalance", "run", {}),
+    ("serving_slo", "run", {}),
 ]
 
 

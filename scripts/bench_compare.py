@@ -68,6 +68,14 @@ RATIO_METRICS = {
     "modeled": +1,
     "speedup": -1,
     "disp_per_tick": +1,
+    # serving_slo latency surface (modeled units, deterministic from the
+    # workload seed): token-latency percentiles must not climb, and the
+    # sustained migration rate must not collapse (the SLO scheduler is
+    # required to pace migration, not park it).
+    "p50": +1,
+    "p99": +1,
+    "gold_p99": +1,
+    "mig_rate": -1,
 }
 # Difference metrics compare by absolute point increase — they can
 # legitimately sit at or below zero (a -3% "slowdown", 0 warm jit misses),
@@ -77,6 +85,11 @@ RATIO_METRICS = {
 # (min-of-reps wall ratios still jitter by ~10 points on shared runners).
 DIFF_METRICS = {
     "slowdown": 25.0,
+    # Tail (p99) decode slowdown across best-of-reps runs: noisier than the
+    # mean-based slowdown above on shared runners, so it gets a wider band —
+    # it exists to catch tail catastrophes (a stall in the migration path
+    # that the mean hides), not single-digit drift.
+    "p99_slowdown": 50.0,
     "mem_overhead": 2.0,
     "jit_misses_warm": 2.0,
     # Migration-program compiles during the run (table2 rows): deterministic

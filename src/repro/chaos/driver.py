@@ -24,6 +24,7 @@ them — the harness's own regression test.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 import os
 
@@ -37,6 +38,21 @@ from repro.core import LeapConfig, MigrationDriver, PoolConfig, init_state, leap
 from repro.distributed import fault
 
 DRAIN_TARGET_PRIORITY = 1  # bulk-drain workload priority (above stream's 0)
+
+
+@functools.lru_cache(maxsize=1)
+def _tiny_model():
+    """One shared tiny LM for every serving scenario in the process — the
+    model is workload scaffolding, not the thing under test, and per-spec
+    params would pay an init + jit compile per scenario."""
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.configs.smoke import reduce
+    from repro.models import lm
+
+    cfg = dataclasses.replace(reduce(get_config("granite_3_2b")), n_layers=2)
+    return cfg, lm.init_params(jax.random.key(0), cfg)
 
 
 @dataclasses.dataclass
@@ -72,6 +88,16 @@ class ChaosDriver:
 
         topo = spec.make_topology()
         self.base_topology = topo
+        self.engine = None  # PagedEngine, serving workload only
+        self.generator = None  # LoadGenerator, serving workload only
+        self.handles: list = []
+        self.events_fired: list[str] = []
+        self.drain_refusals = 0
+        if spec.workload == "serving":
+            self._build_serving(topo)
+            if sabotage is not None:
+                apply_sabotage(self.driver, sabotage)
+            return
         pool_cfg = PoolConfig(
             spec.n_regions,
             spec.slots_per_region,
@@ -100,11 +126,75 @@ class ChaosDriver:
         self.session = self.driver.default_session()
         self.shadow = data.copy()
         self.checker = InvariantChecker(self.driver, self.shadow)
-        self.handles: list = []
-        self.events_fired: list[str] = []
-        self.drain_refusals = 0
         if sabotage is not None:
             apply_sabotage(self.driver, sabotage)
+
+    def _build_serving(self, topo) -> None:
+        """Serving workload: a real PagedEngine + open-loop LoadGenerator.
+
+        The engine owns the pool (built from the spec's region/slot/tier/
+        scheduler fields; ``n_blocks``/``block_elems``/``placement`` are
+        raw-pool knobs and don't apply), so there is no host shadow — the
+        payload invariant's stand-in is the per-tenant page-closure check
+        (:meth:`_check_serving`) layered on the structural invariants.
+        """
+        from repro.load import LoadGenerator, TenantSpec, WorkloadSpec
+        from repro.serving.engine import PagedConfig, PagedEngine
+
+        spec = self.spec
+        cfg_m, params = _tiny_model()
+        leap = LeapConfig(
+            initial_area_blocks=spec.initial_area_blocks,
+            chunk_blocks=spec.chunk_blocks,
+            budget_blocks_per_tick=spec.budget_blocks_per_tick,
+            max_attempts_before_force=spec.max_attempts_before_force,
+            demote_after_attempts=spec.demote_after_attempts,
+            telemetry=True,
+        )
+        self.engine = PagedEngine(
+            cfg_m, params,
+            PagedConfig(block_tokens=4, max_blocks_per_seq=16,
+                        n_regions=spec.n_regions,
+                        slots_per_region=spec.slots_per_region,
+                        huge_factor=spec.huge_factor,
+                        leap=leap, topology=topo, scheduler=spec.scheduler),
+        )
+        self.driver = self.engine.driver
+        self.session = self.engine.session
+        self.shadow = None
+        self.checker = InvariantChecker(self.driver, None)
+        wl = WorkloadSpec(
+            tenants=(
+                TenantSpec("interactive", rate=spec.serving_rate,
+                           prompt_tokens=spec.serving_prompt_tokens,
+                           decode_tokens=spec.serving_decode_tokens,
+                           slo_latency=spec.serving_slo_latency,
+                           priority=1, region=0),
+                TenantSpec("batch", rate=spec.serving_rate / 2,
+                           prompt_tokens=spec.serving_prompt_tokens + 2,
+                           decode_tokens=spec.serving_decode_tokens + 4,
+                           slo_latency=spec.serving_slo_latency * 4,
+                           priority=0, region=spec.n_regions - 1),
+            ),
+            ticks=spec.ticks,
+            seed=spec.seed,
+            churn_every=spec.serving_churn_every,
+            churn_count=1,
+        )
+        self.generator = LoadGenerator(
+            self.engine, wl, scheduler=self.driver.scheduler
+        )
+
+    def _check_serving(self) -> None:
+        """Per-tenant accounting closure, surfaced as a standing invariant."""
+        if self.generator is None:
+            return
+        try:
+            self.generator.verify_accounting()
+        except AssertionError as e:
+            if isinstance(e, InvariantViolation):
+                raise
+            raise InvariantViolation("tenant_accounting", str(e)) from e
 
     def _placement(self) -> np.ndarray:
         spec = self.spec
@@ -122,6 +212,11 @@ class ChaosDriver:
 
     def _step_workload(self, t: int) -> None:
         spec = self.spec
+        if spec.workload == "serving":
+            # The generator's step admits, decodes, churns AND runs the
+            # engine's migration tick — run() must not tick again.
+            self.generator.step()
+            return
         if spec.workload == "drain" and t == 0:
             self._leap(np.arange(spec.n_blocks), spec.n_regions - 1,
                        priority=DRAIN_TARGET_PRIORITY)
@@ -185,7 +280,12 @@ class ChaosDriver:
         elif ev.kind == "restore_topology":
             self.driver.set_topology(self.base_topology)
         elif ev.kind == "cancel_storm":
-            live = [h for h in self.handles if not h.done]
+            pool = (
+                self.handles
+                if self.generator is None
+                else self.engine.rebalance_handles()
+            )
+            live = [h for h in pool if not h.done]
             frac = float(a.get("frac", 1.0))
             k = max(1, int(round(frac * len(live)))) if live else 0
             for i in self.rng.choice(len(live), size=k, replace=False) if k else ():
@@ -212,14 +312,17 @@ class ChaosDriver:
                 if when == t:
                     self._fire(ev)
                     self.checker.check_all(payload=False)  # after every event
-            self.session.tick()
+            if self.generator is None:
+                self.session.tick()  # serving: the generator already ticked
             self.session.poll()
             self.checker.check_all(payload=(t % spec.payload_every == 0))
+            self._check_serving()
         completed = self.session.drain(max_ticks=drain_ticks)
         if completed:
             self.checker.check_final()
         else:
             self.checker.check_all()
+        self._check_serving()
         s = self.driver.stats
         return ChaosReport(
             spec=spec,
@@ -228,7 +331,11 @@ class ChaosDriver:
             checks_run=self.checker.checks_run,
             events_fired=self.events_fired,
             drain_refusals=self.drain_refusals,
-            handles_issued=len(self.handles),
+            handles_issued=(
+                len(self.handles)
+                if self.generator is None
+                else len(self.engine.rebalance_handles())
+            ),
             blocks_requested=int(s.blocks_requested),
             blocks_migrated=int(s.blocks_migrated),
             blocks_forced=int(s.blocks_forced),

@@ -2,8 +2,10 @@
 
 A :class:`ScenarioSpec` is a plain frozen dataclass describing one complete
 chaos run — the machine (topology factory), the pool (small/huge/tiered),
-the workload (bulk drain, serving-style leap stream, exchange, writer mix),
-the scheduler policy, and a schedule of timed :class:`FaultEvent`\\ s.  It
+the workload (bulk drain, serving-style leap stream, exchange, writer mix,
+or a full open-loop serving workload driving a real PagedEngine through
+``repro.load``), the scheduler policy, and a schedule of timed
+:class:`FaultEvent`\\ s.  It
 round-trips exactly through dicts and JSON, which is what makes failures
 *replayable*: a failing spec serializes to a repro file and
 ``python -m repro.chaos --replay <spec.json>`` re-runs it deterministically
@@ -50,8 +52,20 @@ EVENT_KINDS = (
     "out_of_slots",
 )
 
-WORKLOADS = ("drain", "stream", "exchange")
-SCHEDULERS = ("leap", "sync", "sampling")
+WORKLOADS = ("drain", "stream", "exchange", "serving")
+SCHEDULERS = ("leap", "sync", "sampling", "slo")
+
+#: Fault kinds a "serving" workload admits.  The others (write_burst,
+#: out_of_slots) address raw pool block ids directly — under serving the
+#: engine owns the block space, so raw writes would corrupt live KV pages
+#: by design rather than by bug.
+SERVING_EVENT_KINDS = (
+    "drain_region",
+    "congest_link",
+    "degrade_link",
+    "restore_topology",
+    "cancel_storm",
+)
 PLACEMENTS = ("dense", "spread", "random")
 TOPOLOGIES = (None, "symmetric", "two_socket", "quad_socket", "cxl_pooled")
 
@@ -107,6 +121,17 @@ class ScenarioSpec:
     max_priority: int = 3
     writes_per_tick: int = 0  # steady writer mix (blocks touched per tick)
 
+    # -- serving workload (workload == "serving") ----------------------------
+    # The open-loop multi-tenant load generator (repro.load) drives a real
+    # PagedEngine inside the chaos loop; the engine builds its own pool from
+    # n_regions/slots_per_region/huge_factor/topology/scheduler, so
+    # n_blocks/block_elems/placement are ignored in this mode.
+    serving_rate: float = 0.4  # interactive tenant arrivals/tick (batch: half)
+    serving_prompt_tokens: int = 6
+    serving_decode_tokens: int = 8
+    serving_churn_every: int = 2  # background rebalance cadence (0 = none)
+    serving_slo_latency: float = 2.5  # interactive per-token SLO, modeled units
+
     # -- faults + checker cadence -------------------------------------------
     faults: tuple = ()  # tuple[FaultEvent, ...]
     payload_every: int = 1  # payload integrity check every k ticks
@@ -144,12 +169,26 @@ class ScenarioSpec:
             raise ValueError("cxl_pooled topology_args must sum to n_regions")
         if self.ticks < 1 or self.payload_every < 1 or self.leap_every < 1:
             raise ValueError("ticks, payload_every and leap_every must be >= 1")
+        if self.workload == "serving":
+            if self.serving_rate < 0:
+                raise ValueError("serving_rate must be >= 0")
+            if self.serving_prompt_tokens < 1 or self.serving_decode_tokens < 1:
+                raise ValueError("serving prompt/decode tokens must be >= 1")
+            if self.serving_churn_every < 0:
+                raise ValueError("serving_churn_every must be >= 0")
+            if self.serving_slo_latency <= 0:
+                raise ValueError("serving_slo_latency must be > 0")
         for ev in self.faults:
             self._validate_event(ev)
 
     def _validate_event(self, ev: FaultEvent) -> None:
         if ev.kind not in EVENT_KINDS:
             raise ValueError(f"unknown fault kind {ev.kind!r}")
+        if self.workload == "serving" and ev.kind not in SERVING_EVENT_KINDS:
+            raise ValueError(
+                f"fault {ev.kind!r} addresses raw pool blocks; the serving "
+                f"workload admits only {SERVING_EVENT_KINDS}"
+            )
         if ev.tick >= self.ticks:
             raise ValueError(f"fault tick {ev.tick} past scenario end {self.ticks}")
         a = ev.args

@@ -32,6 +32,8 @@ from repro.core.pipeline.scheduler import (
     SamplingConfig,
     SamplingScheduler,
     SchedulerPolicy,
+    SloConfig,
+    SloScheduler,
     SyncScheduler,
     make_scheduler,
 )
@@ -51,6 +53,8 @@ __all__ = [
     "SamplingConfig",
     "SamplingScheduler",
     "SchedulerPolicy",
+    "SloConfig",
+    "SloScheduler",
     "SyncScheduler",
     "TickBudget",
     "VerdictStage",

@@ -55,6 +55,12 @@ class BudgetStage:
         unit = cfg.link_blocks_per_tick
         if unit is None:
             unit = cfg.budget_blocks_per_tick
+        # SchedulerPolicy hook (optional): a deadline-aware policy scales the
+        # per-link unit tick by tick, yielding link bandwidth to application
+        # traffic when SLO slack shrinks (see SloScheduler.link_unit).
+        link_unit = getattr(self.ctx.scheduler, "link_unit", None)
+        if link_unit is not None:
+            unit = link_unit(cfg, unit)
         budgets: dict[tuple[int, int], list[int]] = {}
         n = self.ctx.pool_cfg.n_regions
         for s in range(n):

@@ -25,10 +25,17 @@ of the SAME engine (no separate migration loops anywhere):
                        (force + fresh destination) and paced by the scan
                        budget — the kernel heuristic with the shared
                        mechanism underneath.
+``SloScheduler``       the serving configuration: reliable leap epochs whose
+                       per-tick (and per-link) budget is throttled by the
+                       worst observed SLO slack across tenants — migration
+                       yields bandwidth to decode traffic exactly when p99
+                       latency approaches a tenant's target, and recovers
+                       the full budget when slack returns.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Protocol, runtime_checkable
 
@@ -184,16 +191,132 @@ class SamplingScheduler:
         self.remote_counts *= self.cfg.decay
 
 
+@dataclasses.dataclass(frozen=True)
+class SloConfig:
+    """Knobs of the deadline-driven pacing heuristic.
+
+    Slack is the normalized headroom of a tenant's p99 token latency under
+    its SLO target: ``(slo - p99) / slo`` — 1.0 with no load, 0.0 exactly at
+    the target, negative in violation.  The scheduler throttles on the
+    *minimum* slack over all registered tenants (the tenant closest to its
+    deadline governs the pace).
+    """
+
+    window: int = 64  # recent token latencies kept per tenant (p99 basis)
+    low_slack: float = 0.10  # at/below: migration throttled to min_blocks
+    high_slack: float = 0.50  # at/above: the full configured budget
+    min_blocks: int = 1  # forward-progress floor (never a full stall)
+    quantile: float = 0.99  # the latency quantile slack is computed from
+
+
+class SloScheduler:
+    """Deadline-driven serving policy: leap epochs, slack-paced budget.
+
+    The serving layer registers each tenant's latency target
+    (:meth:`register_tenant`) and streams observed per-token latencies in
+    (:meth:`observe_tokens`) — from the load generator's modeled clock, or
+    from ``PagedEngine`` telemetry spans.  Between the two watermarks the
+    per-tick block budget interpolates linearly from the forward-progress
+    floor up to ``cfg.budget_blocks_per_tick``; the same factor scales the
+    per-link byte budgets via the :meth:`link_unit` hook, so decode traffic
+    reclaims link bandwidth precisely when p99 slack shrinks.  With no
+    tenants registered (or no observations yet) the policy is exactly the
+    LeapScheduler — full paced budget, reliable async epochs.
+    """
+
+    name = "slo"
+
+    def __init__(self, cfg: SloConfig | None = None):
+        self.cfg = cfg or SloConfig()
+        self._slo: dict = {}  # tenant -> target token latency
+        self._window: dict = {}  # tenant -> deque of recent latencies
+        self._priority: dict = {}  # tenant -> serving priority (tie-break)
+
+    # -- SchedulerPolicy ---------------------------------------------------
+
+    def admission_ticket(self) -> AdmissionTicket:
+        return AdmissionTicket()  # reliable async epochs, like the paper
+
+    def tick_budget(self, cfg: LeapConfig) -> int:
+        full = cfg.budget_blocks_per_tick
+        return max(self.cfg.min_blocks, int(round(full * self.pacing_factor())))
+
+    def link_unit(self, cfg: LeapConfig, unit: int) -> int:
+        """Scale the per-link byte budget by the same pacing factor (budget
+        stage hook): a saturated tenant shrinks every link's grant, not just
+        the global block count."""
+        return max(self.cfg.min_blocks, int(round(unit * self.pacing_factor())))
+
+    # -- slack bookkeeping -------------------------------------------------
+
+    def register_tenant(self, tenant, slo_latency: float, priority: int = 0) -> None:
+        """Declare a tenant's per-token latency target (model time units)."""
+        if slo_latency <= 0:
+            raise ValueError("slo_latency must be positive")
+        self._slo[tenant] = float(slo_latency)
+        self._priority[tenant] = int(priority)
+        self._window.setdefault(
+            tenant, collections.deque(maxlen=self.cfg.window)
+        )
+
+    def observe_tokens(self, tenant, latencies) -> None:
+        """Record observed per-token latencies for ``tenant`` (same time
+        units as its registered SLO).  Unknown tenants are ignored — the
+        caller may stream latencies for tenants it never gave targets."""
+        win = self._window.get(tenant)
+        if win is None:
+            return
+        win.extend(float(v) for v in np.atleast_1d(latencies))
+
+    def slack(self, tenant) -> float:
+        """Normalized headroom of ``tenant``'s p99 under its SLO (1.0 when
+        unobserved: an idle tenant never throttles anyone)."""
+        win = self._window.get(tenant)
+        if not win:
+            return 1.0
+        p = float(np.quantile(np.asarray(win), self.cfg.quantile))
+        return (self._slo[tenant] - p) / self._slo[tenant]
+
+    def min_slack(self) -> float:
+        """Worst slack over all registered tenants (the governing tenant)."""
+        if not self._slo:
+            return 1.0
+        return min(self.slack(t) for t in self._slo)
+
+    def pacing_factor(self) -> float:
+        """Budget multiplier in [0, 1]: 1 above ``high_slack``, 0 at/below
+        ``low_slack``, linear between (the min_blocks floor is applied by
+        the budget methods, not here)."""
+        s = self.min_slack()
+        c = self.cfg
+        if s >= c.high_slack:
+            return 1.0
+        if s <= c.low_slack:
+            return 0.0
+        return (s - c.low_slack) / (c.high_slack - c.low_slack)
+
+    def migration_priority(self, tenant, scale: int = 8) -> int:
+        """Pipeline priority for a migration serving ``tenant``: the less
+        slack a tenant has, the sooner the rebalance that relieves it must
+        drain (priority rises as slack falls), with the tenant's serving
+        priority as tie-break.  Returns an int in [0, scale + max priority].
+        """
+        s = min(max(self.slack(tenant), 0.0), 1.0)
+        return int(round((1.0 - s) * scale)) + self._priority.get(tenant, 0)
+
+
 _SCHEDULERS = {
     "leap": LeapScheduler,
     "sync": SyncScheduler,
+    "slo": SloScheduler,
 }
 
 
 def make_scheduler(spec, n_blocks: int | None = None):
     """Resolve a scheduler spec: a policy instance (returned as-is), a name
-    (``"leap"``/``"sync"``/``"sampling"``), or None (the default leap
-    policy).  ``"sampling"`` needs ``n_blocks`` for its counter vectors."""
+    (``"leap"``/``"sync"``/``"slo"``/``"sampling"``), or None (the default
+    leap policy).  ``"sampling"`` needs ``n_blocks`` for its counter
+    vectors."""
     if spec is None:
         return LeapScheduler()
     if isinstance(spec, str):

@@ -1,0 +1,25 @@
+"""Serving-scale workload subsystem: deterministic open-loop traffic,
+SLO-aware pacing hooks, and autoscaler-style drain/fill — the load side of
+DESIGN.md §11.
+
+* :mod:`repro.load.workload` — frozen, JSON round-trippable specs and the
+  pre-materialized Poisson :class:`ArrivalStream`.
+* :mod:`repro.load.generator` — :class:`LoadGenerator`, the tick loop that
+  drives a :class:`repro.serving.PagedEngine` under a modeled clock.
+* :mod:`repro.load.autoscale` — :class:`RegionAutoscaler` drain/fill.
+"""
+
+from repro.load.autoscale import RegionAutoscaler
+from repro.load.generator import LoadGenerator, ServingTimeModel, pow2_chunks
+from repro.load.workload import ArrivalStream, Request, TenantSpec, WorkloadSpec
+
+__all__ = [
+    "ArrivalStream",
+    "LoadGenerator",
+    "RegionAutoscaler",
+    "Request",
+    "ServingTimeModel",
+    "TenantSpec",
+    "WorkloadSpec",
+    "pow2_chunks",
+]

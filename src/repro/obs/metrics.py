@@ -78,12 +78,18 @@ def _label_text(key: tuple) -> str:
 
 
 class MetricsRegistry:
-    """Counters, gauges and histograms with JSON + Prometheus rendering."""
+    """Counters, gauges and histograms with JSON + Prometheus rendering.
+
+    All three kinds take an optional ``labels`` dict — e.g. per-link byte
+    counters labeled ``{src, dst}`` or per-tenant latency histograms labeled
+    ``{tenant}`` — rendered Prometheus-style (``name{k="v"}``); histogram
+    bucket series merge their labels with the ``le`` bound.
+    """
 
     def __init__(self):
         self._counters: dict[str, dict[tuple, float]] = {}
         self._gauges: dict[str, dict[tuple, float]] = {}
-        self._hists: dict[str, Histogram] = {}
+        self._hists: dict[str, dict[tuple, Histogram]] = {}
 
     # -- registration ------------------------------------------------------
 
@@ -97,9 +103,9 @@ class MetricsRegistry:
         """Set gauge ``name`` (per label set) to ``value``."""
         self._gauges.setdefault(name, {})[_label_key(labels)] = float(value)
 
-    def histogram(self, name: str, hist: Histogram) -> None:
-        """Attach a (pre-observed) histogram under ``name``."""
-        self._hists[name] = hist
+    def histogram(self, name: str, hist: Histogram, labels: dict | None = None) -> None:
+        """Attach a (pre-observed) histogram under ``name`` (per label set)."""
+        self._hists.setdefault(name, {})[_label_key(labels)] = hist
 
     # -- rendering ---------------------------------------------------------
 
@@ -112,8 +118,9 @@ class MetricsRegistry:
         for name, series in sorted(self._gauges.items()):
             for key, v in sorted(series.items()):
                 out["gauges"][name + _label_text(key)] = v
-        for name, h in sorted(self._hists.items()):
-            out["histograms"][name] = h.to_dict()
+        for name, hists in sorted(self._hists.items()):
+            for key, h in sorted(hists.items()):
+                out["histograms"][name + _label_text(key)] = h.to_dict()
         return out
 
     def to_prometheus(self) -> str:
@@ -127,15 +134,18 @@ class MetricsRegistry:
             lines.append(f"# TYPE {name} gauge")
             for key, v in sorted(series.items()):
                 lines.append(f"{name}{_label_text(key)} {_fmt(v)}")
-        for name, h in sorted(self._hists.items()):
+        for name, hists in sorted(self._hists.items()):
             lines.append(f"# TYPE {name} histogram")
-            cum = 0
-            for bound, c in zip(h.buckets, h.counts):
-                cum += c
-                lines.append(f'{name}_bucket{{le="{_fmt(bound)}"}} {cum}')
-            lines.append(f'{name}_bucket{{le="+Inf"}} {h.count}')
-            lines.append(f"{name}_sum {_fmt(h.sum)}")
-            lines.append(f"{name}_count {h.count}")
+            for key, h in sorted(hists.items()):
+                cum = 0
+                for bound, c in zip(h.buckets, h.counts):
+                    cum += c
+                    le = key + (("le", _fmt(bound)),)
+                    lines.append(f"{name}_bucket{_label_text(le)} {cum}")
+                inf = key + (("le", "+Inf"),)
+                lines.append(f"{name}_bucket{_label_text(inf)} {h.count}")
+                lines.append(f"{name}_sum{_label_text(key)} {_fmt(h.sum)}")
+                lines.append(f"{name}_count{_label_text(key)} {h.count}")
         return "\n".join(lines) + "\n"
 
 

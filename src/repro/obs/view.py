@@ -15,11 +15,19 @@ from repro.obs.trace import chrome_trace, summarize, write_chrome_trace
 class TelemetryView:
     """Point-in-time telemetry accessor for one migration driver."""
 
-    __slots__ = ("_recorder", "_stats_fn")
+    __slots__ = ("_recorder", "_stats_fn", "_extra_fn")
 
-    def __init__(self, recorder, stats_fn=None):
+    def __init__(self, recorder, stats_fn=None, extra_fn=None):
         self._recorder = recorder
         self._stats_fn = stats_fn
+        self._extra_fn = extra_fn
+
+    def with_extra(self, extra_fn) -> "TelemetryView":
+        """A sibling view whose metrics include extra series: ``extra_fn(reg)``
+        runs against each freshly built :class:`MetricsRegistry` — the hook a
+        layer above the driver (e.g. the serving engine's per-tenant store)
+        uses to co-expose its series in the same scrape."""
+        return TelemetryView(self._recorder, self._stats_fn, extra_fn)
 
     @property
     def enabled(self) -> bool:
@@ -47,7 +55,10 @@ class TelemetryView:
 
     def metrics(self) -> MetricsRegistry:
         stats = self._stats_fn() if self._stats_fn is not None else None
-        return build_registry(self._recorder, stats)
+        reg = build_registry(self._recorder, stats)
+        if self._extra_fn is not None:
+            self._extra_fn(reg)
+        return reg
 
     def metrics_json(self) -> dict:
         return self.metrics().to_json()

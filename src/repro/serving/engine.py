@@ -29,6 +29,7 @@ from repro.core import LeapConfig, MigrationDriver, PoolConfig, init_state
 from repro.core.state import REGION, SLOT
 from repro.kernels import ops
 from repro.models import lm
+from repro.obs.metrics import LATENCY_TICK_BUCKETS, Histogram
 from repro.models.common import rms_norm
 from repro.models.moe import moe_ffn
 from repro.models.common import mlp_forward
@@ -72,10 +73,11 @@ class Sequence:
     length: int
     block_ids: list[int]  # logical leap block ids, in order
     tokens: list[int]
+    tenant: str = "default"  # serving class (SLO/metrics attribution)
     promoted: set = dataclasses.field(default_factory=set)  # huge group ids
 
 
-def _kv_write(state, block_ids, offsets, k_new, v_new):
+def _kv_write_impl(state, block_ids, offsets, k_new, v_new):
     """Append one token's K/V (all layers) into its page; leap-dirty fused.
 
     block_ids/offsets: [B]; k_new/v_new: [B, L, KVH, hd].
@@ -91,7 +93,10 @@ def _kv_write(state, block_ids, offsets, k_new, v_new):
     return dataclasses.replace(state, pool=pool, dirty=dirty)
 
 
-_kv_write = jax.jit(_kv_write, donate_argnames=("state",))
+# Standalone jitted form (donates state).  The decode path instead traces
+# _kv_write_impl inside the engine's whole-step jit, where donation lives on
+# the outer call — nesting a donating jit inside another jit is a no-op.
+_kv_write = jax.jit(_kv_write_impl, donate_argnames=("state",))
 
 
 class PagedEngine:
@@ -161,10 +166,28 @@ class PagedEngine:
                 list(range(r * pages_per_region, (r + 1) * pages_per_region))
                 for r in range(pcfg.n_regions)
             ]
+        self.n_pages = n_blocks
         self.seqs: dict[int, Sequence] = {}
         self._next_sid = 0
         # sid -> the handle of its latest rebalance (latency attribution)
         self._rebalance_handles: dict[int, LeapHandle] = {}
+        # Compiled decode step: cfg/block_tokens closed over, donating the
+        # old KV state so appends stay in place.  One compile per distinct
+        # decode batch size — callers that vary batch size should chunk to
+        # powers of two (repro.load does) to bound the compile count.
+        self._decode_step = jax.jit(
+            lambda p, s, t, le, k: _paged_step(p, s, t, le, k, cfg, pcfg.block_tokens),
+            donate_argnums=(1,),
+        )
+        self._decode_shapes: set[int] = set()  # observed decode batch sizes
+        # jitted prefill per prompt length (admit() reuses, never retraces)
+        self._prefill_fns: dict[int, object] = {}
+        # Per-tenant serving metrics: token-latency histogram (modeled units
+        # supplied by the caller via observe_tokens) and migration bytes
+        # attributed on rebalance completion.  Exposed through telemetry().
+        self._tenant_lat: dict[str, Histogram] = {}
+        self._tenant_mig_bytes: dict[str, int] = {}
+        self._tenant_tokens: dict[str, int] = {}
 
     # -- admission ---------------------------------------------------------------
 
@@ -221,23 +244,29 @@ class PagedEngine:
         else:
             self._partial.add(g)
 
-    def admit(self, prompt: np.ndarray, region: int = 0) -> int:
+    def admit(self, prompt: np.ndarray, region: int = 0, tenant: str = "default") -> int:
         """Prefill a prompt, install its pages, and emit the first generated
         token from the prefill logits (``seqs[sid].tokens[-1]``).  Subsequent
         tokens come from ``decode()``, which processes the latest generated
-        token at position ``length``."""
+        token at position ``length``.  ``tenant`` labels the sequence's
+        serving class for per-tenant metrics and SLO attribution."""
         cfg, blk = self.cfg, self.pcfg.block_tokens
         toks = jnp.asarray(prompt)[None]
-        logits, cache = jax.jit(lambda p, t: lm.prefill(p, t, cfg, len(prompt)))(
-            self.params, toks
-        )
+        fn = self._prefill_fns.get(len(prompt))
+        if fn is None:
+            n = len(prompt)
+            fn = jax.jit(lambda p, t, n=n: lm.prefill(p, t, cfg, n))
+            self._prefill_fns[n] = fn
+        logits, cache = fn(self.params, toks)
         first_tok = int(jnp.argmax(logits, -1)[0])
         # contiguous cache -> pages
         k, v = _flatten_cache(cache, cfg)  # [L, S, KVH, hd]
         s = len(prompt)
         sid = self._next_sid
         self._next_sid += 1
-        seq = Sequence(sid, region, s, [], list(map(int, prompt)) + [first_tok])
+        seq = Sequence(
+            sid, region, s, [], list(map(int, prompt)) + [first_tok], tenant=tenant
+        )
         n_blocks = (s + blk - 1) // blk
         for j in range(n_blocks):
             b = self._alloc_block(region, sid)
@@ -274,7 +303,7 @@ class PagedEngine:
 
     def decode(self, sids: list[int], greedy: bool = True) -> list[int]:
         """One token for each sequence in ``sids``; appends in place."""
-        cfg, blk = self.cfg, self.pcfg.block_tokens
+        blk = self.pcfg.block_tokens
         # allocate next block where needed, BEFORE the step
         for sid in sids:
             seq = self.seqs[sid]
@@ -283,8 +312,9 @@ class PagedEngine:
             self._maybe_promote(seq)
         tables, lens = self._tables(sids)
         toks = jnp.asarray([[self.seqs[s].tokens[-1]] for s in sids], jnp.int32)
-        logits, self.driver.state = _paged_step(
-            self.params, self.driver.state, tables, lens, toks, cfg, blk
+        self._decode_shapes.add(len(sids))
+        logits, self.driver.state = self._decode_step(
+            self.params, self.driver.state, tables, lens, toks
         )
         out = np.asarray(jnp.argmax(logits, -1))
         for i, sid in enumerate(sids):
@@ -365,7 +395,22 @@ class PagedEngine:
                 np.asarray(seq.block_ids, np.int32), dst_region, tag=sid
             )
         self._rebalance_handles[sid] = handle
+        tenant = seq.tenant
+        handle.on_done(lambda h: self._account_migration(tenant, h))
         return handle
+
+    def _account_migration(self, tenant: str, handle: LeapHandle) -> None:
+        """Attribute a resolved rebalance's moved bytes to its tenant."""
+        p = handle.progress()
+        moved = (p.committed + p.forced) * self.pool_cfg.block_bytes
+        self._tenant_mig_bytes[tenant] = (
+            self._tenant_mig_bytes.get(tenant, 0) + moved
+        )
+
+    def rebalance_handles(self) -> list:
+        """The latest rebalance handle per sequence (live and resolved) —
+        what a chaos cancel-storm or a drain supervisor operates on."""
+        return list(self._rebalance_handles.values())
 
     def rebalance_latency(self, sid: int):
         """Latency breakdown of ``sid``'s latest :meth:`rebalance` (a
@@ -375,10 +420,82 @@ class PagedEngine:
         handle = self._rebalance_handles.get(sid)
         return handle.latency() if handle is not None else None
 
+    # -- tenants / capacity ---------------------------------------------------------
+
+    def observe_tokens(self, tenant: str, latencies) -> None:
+        """Record per-token latencies (caller-chosen units — the load
+        generator feeds modeled time units) into the tenant's histogram."""
+        hist = self._tenant_lat.get(tenant)
+        if hist is None:
+            hist = self._tenant_lat[tenant] = Histogram(LATENCY_TICK_BUCKETS)
+        vals = np.atleast_1d(np.asarray(latencies, np.float64))
+        for v in vals:
+            hist.observe(v)
+        self._tenant_tokens[tenant] = self._tenant_tokens.get(tenant, 0) + len(vals)
+
+    def tenant_stats(self) -> dict:
+        """Per-tenant snapshot: tokens observed, migration bytes, latency
+        histogram dict (empty entries omitted)."""
+        out: dict[str, dict] = {}
+        tenants = set(self._tenant_tokens) | set(self._tenant_mig_bytes)
+        tenants.update(s.tenant for s in self.seqs.values())
+        for t in sorted(tenants):
+            hist = self._tenant_lat.get(t)
+            out[t] = {
+                "tokens": self._tenant_tokens.get(t, 0),
+                "migration_bytes": self._tenant_mig_bytes.get(t, 0),
+                "latency": hist.to_dict() if hist is not None else None,
+            }
+        return out
+
+    def free_pages(self) -> int:
+        """Logical pages a NEW sequence could allocate right now (per-sequence
+        reserved spares excluded — they are spendable only by their owner)."""
+        if self.pcfg.huge_factor == 1:
+            return sum(len(f) for f in self._free_blocks)
+        G = self.pcfg.huge_factor
+        n = sum(len(g) for g in self._free_groups) * G
+        n += sum(len(self._group_free[g]) for g in self._partial)
+        return n
+
+    def page_accounting(self) -> dict:
+        """Page-closure snapshot: every logical page is exactly one of
+        {held by a live sequence, reserved spare, free} —
+        ``used + spare + free == total``.  Includes per-tenant held pages."""
+        used = sum(len(s.block_ids) for s in self.seqs.values())
+        spare = (
+            0
+            if self.pcfg.huge_factor == 1
+            else sum(len(v) for v in self._seq_spare.values())
+        )
+        per_tenant: dict[str, int] = {}
+        for s in self.seqs.values():
+            per_tenant[s.tenant] = per_tenant.get(s.tenant, 0) + len(s.block_ids)
+        return {
+            "total": self.n_pages,
+            "used": used,
+            "spare": spare,
+            "free": self.free_pages(),
+            "per_tenant": per_tenant,
+        }
+
+    def _tenant_series(self, reg) -> None:
+        """Extra-series hook: co-expose the tenant store in driver scrapes."""
+        for t, hist in sorted(self._tenant_lat.items()):
+            reg.histogram("leap_tenant_token_latency", hist, labels={"tenant": t})
+        for t, nbytes in sorted(self._tenant_mig_bytes.items()):
+            reg.counter(
+                "leap_tenant_migration_bytes_total", nbytes, labels={"tenant": t}
+            )
+        for t, n in sorted(self._tenant_tokens.items()):
+            reg.counter("leap_tenant_tokens_total", n, labels={"tenant": t})
+
     def telemetry(self):
         """The KV pool's :class:`repro.obs.TelemetryView` (same recorder the
-        session exposes — decode-side rebalances land in the same timeline)."""
-        return self.session.telemetry()
+        session exposes — decode-side rebalances land in the same timeline),
+        extended with the engine's per-tenant series (token-latency
+        histograms, migration-byte and token counters labeled ``tenant=``)."""
+        return self.session.telemetry().with_extra(self._tenant_series)
 
     def tick(self) -> None:
         self.session.tick()
@@ -465,5 +582,5 @@ def _paged_step(params, state, tables, lens, toks, cfg: ModelConfig, blk: int):
     # persist the appended kv of every layer through the leap-aware write
     k_all = jnp.stack(new_k, axis=1)  # [B, L, KVH, hd]
     v_all = jnp.stack(new_v, axis=1)
-    state = _kv_write(state, append_block, offset, k_all, v_all)
+    state = _kv_write_impl(state, append_block, offset, k_all, v_all)
     return logits, state
