@@ -1,9 +1,11 @@
 """Fig. 9 (beyond paper) — control-path cost of migration dispatch.
 
-Head-to-head of the legacy per-chunk dispatch path (one jitted program per
-16-block chunk and per area, a fresh XLA compile for every distinct batch
-length the adaptive splitter produces) against the batched path (shape-
-bucketed fused multi-area programs, <=3 dispatches per tick).  Two workloads:
+Head-to-head of the three dispatch generations: the legacy per-chunk path
+(one jitted program per 16-block chunk and per area, a fresh XLA compile
+for every distinct batch length the adaptive splitter produces), the
+batched path (shape-bucketed fused multi-area programs, <=3 dispatches per
+tick), and the megastep path (the whole tick as ONE device program with a
+budget-floored shared bucket — DESIGN.md §12).  Two workloads:
 
   * ``quiet``  — the fig4 drain (no concurrent writes): pure dispatch count.
   * ``storm``  — the fig5 "high" case (concurrent writes -> dirty retries ->
@@ -11,8 +13,8 @@ bucketed fused multi-area programs, <=3 dispatches per tick).  Two workloads:
 
 Reported per configuration: drain wall-clock (cold: includes compiles, and
 warm: jit caches hot), dispatches/tick, and migration-program jit cache
-misses during the run.  ``derived`` also carries the batched-over-legacy
-warm-drain speedup on the batched rows.
+misses during the run.  ``derived`` also carries the over-legacy warm-drain
+speedup on the batched and megastep rows.
 """
 
 import time
@@ -52,15 +54,14 @@ def _drain(n_blocks, block_kb, fused, per_tick, seed=0):
 def run(n_blocks=256, block_kb=64):
     results = {}
     for wl_label, per_tick in (("quiet", 0), ("storm", 8)):
-        for fused in (False, True):
-            mode = "batched" if fused else "legacy"
+        for mode in ("legacy", "batched", "megastep"):
             # cold: first drain of this (mode, workload) pays its compiles;
             # warm: same shapes again, so wall-clock isolates dispatch count.
-            t_cold, stats_cold = _drain(n_blocks, block_kb, fused, per_tick, seed=0)
-            t_warm, stats_warm = _drain(n_blocks, block_kb, fused, per_tick, seed=1)
+            t_cold, stats_cold = _drain(n_blocks, block_kb, mode, per_tick, seed=0)
+            t_warm, stats_warm = _drain(n_blocks, block_kb, mode, per_tick, seed=1)
             results[(wl_label, mode)] = t_warm
             speedup = ""
-            if fused:
+            if mode != "legacy":
                 speedup = f";speedup_warm=x{results[(wl_label, 'legacy')] / t_warm:.2f}"
             emit(
                 f"fig9/{wl_label}/{mode}",

@@ -6,6 +6,12 @@ time overhead: wall time over copying the same useful bytes via raw copy.
 control-path cost: device dispatches per tick and migration-program jit
 compiles incurred during the run (fig9_dispatch.py measures these head to
 head against the legacy per-chunk dispatch path).
+
+Runs the default dispatch generation (megastep: the whole tick as ONE
+device program) with ``warm_dispatch=True``: steady-state variants compile
+ahead of time at pool attach, mirroring how ``t_opt`` is itself measured
+with the raw-copy program already warm — both sides of the overhead ratio
+exclude one-time XLA compiles.
 """
 
 import time
@@ -34,10 +40,17 @@ def run(n_blocks=256, block_kb=64, per_tick=8):
             chunk_blocks=min(area_blocks, 32),
             budget_blocks_per_tick=64,
             max_attempts_before_force=8,
+            warm_dispatch=True,
         )
         _, drv, _ = make_pool(n_blocks, block_kb, leap=lc)
         sess = drv.default_session()
         burst = WriteBurst(drv, n_blocks, per_tick)
+        # Warm the write-path program off the clock, like t_opt: the row
+        # measures migration overhead, not the load generator's XLA compile.
+        # (Writes block 0 directly so the burst's seeded stream — and with
+        # it the retry pattern — is untouched.)
+        drv.write(jnp.zeros(per_tick, dtype=jnp.int32), burst._vals)
+        jax.block_until_ready(drv.state.pool)
         h = sess.leap(np.arange(n_blocks), 1)
         t0 = time.perf_counter()
         while not h.done:
@@ -66,10 +79,13 @@ def run(n_blocks=256, block_kb=64, per_tick=8):
         budget_blocks_per_tick=64,
         demote_after_attempts=2,
         max_attempts_before_force=8,
+        warm_dispatch=True,
     )
     _, drv, _ = make_pool(n_blocks, block_kb, leap=lc, huge_factor=G, adopt=True)
     sess = drv.default_session()
     burst = WriteBurst(drv, n_blocks, per_tick)
+    drv.write(jnp.zeros(per_tick, dtype=jnp.int32), burst._vals)
+    jax.block_until_ready(drv.state.pool)
     h = sess.leap(np.arange(n_blocks), 1)
     t0 = time.perf_counter()
     while not h.done:

@@ -115,6 +115,7 @@ class ChaosDriver:
             budget_blocks_per_tick=spec.budget_blocks_per_tick,
             max_attempts_before_force=spec.max_attempts_before_force,
             demote_after_attempts=spec.demote_after_attempts,
+            fused_dispatch=spec.dispatch,
             # Always record under chaos: a failing run dumps its trace next
             # to the repro spec, and the drift property test replays the
             # event log against MigrationStats.
@@ -149,6 +150,7 @@ class ChaosDriver:
             budget_blocks_per_tick=spec.budget_blocks_per_tick,
             max_attempts_before_force=spec.max_attempts_before_force,
             demote_after_attempts=spec.demote_after_attempts,
+            fused_dispatch=spec.dispatch,
             telemetry=True,
         )
         self.engine = PagedEngine(

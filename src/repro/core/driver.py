@@ -298,7 +298,8 @@ class MigrationDriver:
         (verdict stage), (ii) dispatches commits for areas whose copy
         completed in an earlier tick, (iii) advances copies of open epochs
         and opens new epochs within the budget stage's grants (dispatch
-        stage).  With fused dispatch the whole tick is <=3 device programs;
+        stage).  By default the whole tick is ONE fused device program (the
+        megastep, DESIGN.md §12; <=3 programs under batched dispatch);
         dispatches are async either way — interleave application steps
         between ticks for concurrency.
         """

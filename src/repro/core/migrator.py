@@ -27,7 +27,7 @@ Two copy backends:
                     gather/scatter packing inside the shard is the
                     ``leap_copy`` Pallas kernel on TPU.
 
-Two dispatch generations (DESIGN.md §3):
+Three dispatch generations (DESIGN.md §3, §12):
 
   * the per-area/per-chunk programs (``begin_area``/``copy_chunk``/
     ``commit_area``/``force_migrate``) — one dispatch per chunk and per area,
@@ -35,10 +35,20 @@ Two dispatch generations (DESIGN.md §3):
     benchmark baseline and for callers that drive single areas directly;
   * the batched programs (``begin_areas``/``fused_copy``/``commit_areas``/
     ``force_areas``) — one dispatch covers every area the driver scheduled
-    this tick.  Batch lengths are padded to geometric buckets by replicating
-    lane 0 (idempotent duplicate updates), so the jit cache holds O(log n)
-    entries however the adaptive splitter fragments the work, and the
-    destination region is a traced operand rather than a static one.
+    this tick (<=3 programs per tick).  Batch lengths are padded to geometric
+    buckets by replicating lane 0 (idempotent duplicate updates), so the jit
+    cache holds O(log n) entries however the adaptive splitter fragments the
+    work, and the destination region is a traced operand rather than a
+    static one;
+  * the :func:`megastep` program — the whole tick (commit verdicts of the
+    previous epoch, then begin/zero/force/copy/run phases) fused into ONE
+    device program over the flat pool view, with the pool buffers donated
+    and the dirty verdict produced on device.  Every phase operand shares a
+    single bucketed batch length, floored at the steady-state tick budget,
+    and phases pad with *out-of-bounds sentinel* lanes (JAX drops
+    out-of-bounds scatter updates) so one compiled variant serves every
+    tick — including retry storms, whose fragmented batch lengths all round
+    up to the same bucket.
 """
 
 from __future__ import annotations
@@ -374,10 +384,128 @@ def zero_fill(state: LeapState, slots: jax.Array, dst_region: int) -> LeapState:
 
 
 # --------------------------------------------------------------------------
+# Megastep dispatch: the whole tick in ONE device program (DESIGN.md §12).
+#
+# Padding discipline differs from the batched generation.  Every pure-jnp
+# phase operand is padded to the shared bucket ``B`` with OUT-OF-BOUNDS
+# SENTINELS (block ids -> N, regions -> R, slots -> S, flat ids -> R*S):
+# JAX drops out-of-bounds scatter rows and clamps out-of-bounds gather
+# indices, so a padded lane performs no state update and yields garbage
+# verdict lanes the host already ignores (it slices verdicts by real
+# offsets).  The two kernel phases (``copy_blocks_impl``/``copy_runs_impl``)
+# must NOT see out-of-bounds ids — Pallas scalar-prefetched index maps are
+# undefined there — so the host pads the copy plan by replicating lane 0
+# (identical duplicate writes; destination slots are freshly allocated and
+# disjoint from every source) or, when the tick copies nothing, with slot-0
+# self-copies (value-identical no-ops).  The huge-group operands
+# (``grp_*``/``run_*``) are trace-time skippable: shape ``(0,)`` compiles a
+# variant without those phases, so small-only pools never pay for them.
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, donate_argnames=("state",), static_argnames=("group", "impl"))
+def megastep(
+    state: LeapState,
+    commit_ids: jax.Array,
+    commit_regions: jax.Array,
+    commit_slots: jax.Array,
+    grp_members: jax.Array,
+    grp_regions: jax.Array,
+    grp_starts: jax.Array,
+    begin_ids: jax.Array,
+    zero_flat: jax.Array,
+    force_ids: jax.Array,
+    force_regions: jax.Array,
+    force_slots: jax.Array,
+    copy_src: jax.Array,
+    copy_dst: jax.Array,
+    run_src: jax.Array,
+    run_dst: jax.Array,
+    group: int = 1,
+    impl: str | None = None,
+) -> tuple[LeapState, jax.Array, jax.Array]:
+    """One tick = one dispatch: commit -> begin -> zero -> force -> copy.
+
+    Fuses the previous epoch's commit verdicts with this tick's begin/zero/
+    force/copy phases into a single XLA program over the donated pool
+    buffers.  Phase order matches the batched generation's cross-program
+    order exactly (commit verdicts are read from the *input* ``dirty`` before
+    begin/force clear their — disjoint — id sets; the force phase reads the
+    post-commit table and the post-zero pool).  The verdict vectors stay on
+    device: the host wraps them in :class:`~repro.core.queues.CommitBatch`
+    futures and harvests them asynchronously, off the tick critical path.
+    """
+    table, dirty, in_flight = state.table, state.dirty, state.in_flight
+    s_per = state.pool.shape[1]
+
+    # -- commit (previous epoch): small blocks, then all-or-nothing groups --
+    if commit_ids.shape[0]:
+        verdict_small = dirty[commit_ids]  # True => copy invalidated
+        proposed = jnp.stack([commit_regions, commit_slots], axis=1).astype(table.dtype)
+        new_entries = jnp.where(verdict_small[:, None], table[commit_ids], proposed)
+        table = table.at[commit_ids].set(new_entries)
+        in_flight = in_flight.at[commit_ids].set(False)
+    else:
+        verdict_small = jnp.zeros((0,), dtype=jnp.bool_)
+
+    if grp_starts.shape[0]:
+        k = grp_starts.shape[0]
+        members = grp_members.reshape(k, group)
+        verdict_groups = dirty[members].any(axis=1)
+        member_slots = grp_starts[:, None] + jnp.arange(group)[None, :]
+        gprop = jnp.stack(
+            [jnp.broadcast_to(grp_regions[:, None], (k, group)), member_slots],
+            axis=-1,
+        ).astype(table.dtype)
+        gnew = jnp.where(verdict_groups[:, None, None], table[members], gprop)
+        table = table.at[members.reshape(-1)].set(gnew.reshape(-1, 2))
+        in_flight = in_flight.at[grp_members].set(False)
+    else:
+        verdict_groups = jnp.zeros((0,), dtype=jnp.bool_)
+
+    # -- begin: open this tick's copy epochs --------------------------------
+    if begin_ids.shape[0]:
+        in_flight = in_flight.at[begin_ids].set(True)
+        dirty = dirty.at[begin_ids].set(False)
+
+    # -- zero freshly allocated destinations (page-fault analogue) ----------
+    flat = flat_pool_view(state.pool)
+    if zero_flat.shape[0]:
+        flat = flat.at[zero_flat].set(0)
+
+    # -- force: fused copy+flip escalations (reads the post-commit table) ---
+    if force_ids.shape[0]:
+        loc = table[force_ids]
+        force_src = loc[:, REGION] * s_per + loc[:, SLOT]
+        force_dst = force_regions * s_per + force_slots
+        flat = flat.at[force_dst].set(flat[force_src])
+        fentries = jnp.stack([force_regions, force_slots], axis=1).astype(table.dtype)
+        table = table.at[force_ids].set(fentries)
+        in_flight = in_flight.at[force_ids].set(False)
+        dirty = dirty.at[force_ids].set(False)
+
+    # -- physical copy: the leap_copy kernel over the flat pool view --------
+    if copy_src.shape[0]:
+        flat = ops.copy_blocks_impl(flat, copy_src, copy_dst, impl=impl)
+    if run_src.shape[0]:
+        flat = ops.copy_runs_impl(flat, run_src, run_dst, run=group, impl=impl)
+
+    state = dataclasses.replace(
+        state,
+        pool=flat.reshape(state.pool.shape),
+        table=table,
+        dirty=dirty,
+        in_flight=in_flight,
+    )
+    return state, verdict_small, verdict_groups
+
+
+# --------------------------------------------------------------------------
 # Compile-cache introspection (control-path cost accounting)
 # --------------------------------------------------------------------------
 
 _PROGRAMS = {
+    "megastep": megastep,
     "zero_fill": zero_fill,
     "begin_area": begin_area,
     "copy_chunk": copy_chunk,

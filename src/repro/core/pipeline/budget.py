@@ -7,11 +7,22 @@ a budget decision: a grant of 0 tells dispatch to set the area aside and
 keep scheduling traffic that crosses other links.  Link *accounting*
 (``stats.bytes_per_link``) also lives here and is tracked on every driver,
 topology or not, so benchmarks can model link costs post-hoc.
+
+The per-link budgets are backed by one contiguous ``[n_links, 3]`` int32
+array (``TickBudget.link_array``); the ``links`` dict maps ``(src, dst)``
+to row *views* of it, so the granting methods above mutate the array in
+place and :meth:`TickBudget.device_grants` can ship the remaining grants to
+the device as a single host->device transfer — the megastep dispatch
+generation consumes budgets as precomputed arrays rather than per-grant
+host calls (DESIGN.md §12).
 """
 
 from __future__ import annotations
 
 import dataclasses
+
+import jax
+import numpy as np
 
 from repro.core.adaptive import Area
 from repro.core.pipeline.context import PipelineContext
@@ -19,15 +30,32 @@ from repro.core.pipeline.context import PipelineContext
 
 @dataclasses.dataclass
 class TickBudget:
-    """One tick's spendable budget: global blocks + per-link [bytes, opens]."""
+    """One tick's spendable budget: global blocks + per-link [bytes, opens].
+
+    ``links`` maps ``(src, dst)`` to ``[blocks_left, opens_left, cap]`` rows
+    that are views into ``link_array`` (one ``[n_links, 3]`` int32 array,
+    row order given by ``link_keys``); ``device_grants()`` snapshots the
+    remaining grants as a device array.
+    """
 
     blocks: int  # global per-tick block budget left
-    links: dict | None  # (src, dst) -> [blocks_left, opens_left, cap], or None
+    links: dict | None  # (src, dst) -> [blocks_left, opens_left, cap] row views
+    link_array: np.ndarray | None = None  # [n_links, 3] backing store
+    link_keys: tuple = ()  # row i of link_array budgets link link_keys[i]
 
     def link(self, src: int, dst: int):
         if self.links is None:
             return None
         return self.links.get((src, dst))
+
+    def device_grants(self) -> jax.Array | None:
+        """Remaining per-link grants as ONE device array (or None when link
+        scheduling is off): row i is ``[blocks_left, opens_left]`` for
+        ``link_keys[i]``.  A single transfer of the whole budget state —
+        device-side consumers never trigger per-grant host round-trips."""
+        if self.link_array is None:
+            return None
+        return jax.numpy.asarray(self.link_array[:, :2])
 
 
 class BudgetStage:
@@ -38,20 +66,28 @@ class BudgetStage:
 
     def open_tick(self) -> TickBudget:
         with self.ctx.telemetry.stage("budget.open_tick"):
+            links, arr, keys = self._link_budgets()
             return TickBudget(
                 blocks=self.ctx.scheduler.tick_budget(self.ctx.cfg),
-                links=self._link_budgets(),
+                links=links,
+                link_array=arr,
+                link_keys=keys,
             )
 
-    def _link_budgets(self) -> dict | None:
-        """Fresh per-tick ``(src, dst) -> [blocks_left, opens_left, cap]``
-        budget map (cap = the untouched per-tick block budget, so the huge
-        path can recognize a link nothing else used this tick), or None when
-        link scheduling is off (no topology / disabled)."""
+    def _link_budgets(self):
+        """Fresh per-tick link budgets, array-backed.
+
+        Returns ``(links, arr, keys)``: ``arr`` is one ``[n_links, 3]``
+        int32 array of ``[blocks_left, opens_left, cap]`` rows (cap = the
+        untouched per-tick block budget, so the huge path can recognize a
+        link nothing else used this tick); ``links`` maps ``(src, dst)`` to
+        row views of it; ``keys`` fixes the row order.  ``(None, None, ())``
+        when link scheduling is off (no topology / disabled).
+        """
         topo = self.ctx.topology
         cfg = self.ctx.cfg
         if topo is None or not cfg.link_schedule:
-            return None
+            return None, None, ()
         unit = cfg.link_blocks_per_tick
         if unit is None:
             unit = cfg.budget_blocks_per_tick
@@ -61,14 +97,15 @@ class BudgetStage:
         link_unit = getattr(self.ctx.scheduler, "link_unit", None)
         if link_unit is not None:
             unit = link_unit(cfg, unit)
-        budgets: dict[tuple[int, int], list[int]] = {}
         n = self.ctx.pool_cfg.n_regions
-        for s in range(n):
-            for d in range(n):
-                if s != d:
-                    cap = topo.link_blocks(s, d, unit)
-                    budgets[(s, d)] = [cap, int(topo.concurrency[s, d]), cap]
-        return budgets
+        keys = tuple((s, d) for s in range(n) for d in range(n) if s != d)
+        arr = np.zeros((len(keys), 3), dtype=np.int32)
+        budgets: dict[tuple[int, int], np.ndarray] = {}
+        for i, (s, d) in enumerate(keys):
+            cap = topo.link_blocks(s, d, unit)
+            arr[i] = (cap, int(topo.concurrency[s, d]), cap)
+            budgets[(s, d)] = arr[i]  # row VIEW: grants mutate arr in place
+        return budgets, arr, keys
 
     # -- grants (0 = congestion-defer; dispatch sets the area aside) -------
 

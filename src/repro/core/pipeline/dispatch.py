@@ -1,12 +1,24 @@
-"""Dispatch stage: epoch opens and shape-bucketed device-program batching.
+"""Dispatch stage: epoch opens and single-dispatch tick assembly.
 
 Owns the per-tick scheduling loop (``run_tick``): advances copies of open
-epochs, opens new epochs off the priority queue, and batches the tick's
-work into at most three fused device programs — one ``begin_areas``, one
-``fused_copy`` (plus one contiguous-run program for huge blocks), one
-``commit_areas``/``commit_groups`` — padded to geometric buckets so the jit
-cache stays O(log n) (DESIGN.md §3).  ``fused_dispatch=False`` selects the
-legacy per-chunk/per-area dispatch path (the benchmark baseline).
+epochs, opens new epochs off the priority queue, and hands the tick's work
+to the device in one of three dispatch generations
+(``LeapConfig.dispatch_mode``):
+
+  * ``"megastep"`` (default) — the entire tick is ONE device program
+    (:func:`repro.core.migrator.megastep`): the previous epoch's commits,
+    then begin/zero/force/copy, over the donated flat pool view.  The host
+    side of this stage is pure *plan assembly*: it gathers numpy id vectors,
+    pads them with out-of-bounds sentinels to one shared bucket, and crosses
+    the host/device boundary exactly once per tick.  The dirty verdict never
+    crosses back here — it stays device-resident inside the
+    :class:`~repro.core.queues.CommitBatch` future, harvested by the verdict
+    stage off the tick critical path (DESIGN.md §12).
+  * ``"batched"`` — the previous generation: at most three fused programs
+    per tick (``begin_areas``, ``fused_copy`` + one contiguous-run program
+    for huge blocks, ``commit_areas``/``commit_groups``), padded to
+    geometric buckets so the jit cache stays O(log n) (DESIGN.md §3).
+  * ``"legacy"`` — per-chunk/per-area dispatch (the benchmark baseline).
 
 Budget decisions (how much a link grants, congestion deferral) come from
 the budget stage; dirty verdicts are harvested later by the verdict stage.
@@ -38,9 +50,20 @@ class DispatchStage:
         self.ctx = ctx
         self.budget = budget
         self.accounting = accounting
+        # Dispatch generation, resolved once ("legacy"|"batched"|"megastep").
+        # cfg.fused_dispatch is a bool-or-string knob and the string "legacy"
+        # is truthy, so every branch below compares modes, never truthiness.
+        self._mode = ctx.cfg.dispatch_mode
+        self._fused = self._mode != "legacy"
         # Source slots freed by this tick's forced escalations, quarantined
         # until the tick's device batches are dispatched (see run_tick).
         self._freed: list[np.ndarray] = []
+        # Megastep mode: commit-ready areas staged by commit_ready() for the
+        # tick's single dispatch (they stay in ctx.active until it fires).
+        self._staged_small: list[Area] = []
+        self._staged_huge: list[Area] = []
+        if self._mode == "megastep" and ctx.cfg.warm_dispatch:
+            self._warm_megastep()
 
     # -- the per-tick scheduling loop --------------------------------------
 
@@ -53,7 +76,13 @@ class DispatchStage:
         ctx = self.ctx
         with ctx.telemetry.stage("dispatch.commit_ready"):
             ready = [a for a in ctx.active if a.copied == len(a)]
-            if ctx.cfg.fused_dispatch:
+            if self._mode == "megastep":
+                # No dispatch here: the commits ride this tick's megastep.
+                # Ready areas stay in ctx.active until it fires, so emptiness
+                # checks (huge stall detection, done()) see them as live.
+                self._staged_small = [a for a in ready if not a.huge]
+                self._staged_huge = [a for a in ready if a.huge]
+            elif self._mode == "batched":
                 self._dispatch_commit_batch([a for a in ready if not a.huge])
                 self._dispatch_commit_groups([a for a in ready if a.huge])
             else:
@@ -70,7 +99,7 @@ class DispatchStage:
 
     def _run_tick(self, tb: TickBudget) -> None:
         ctx = self.ctx
-        fused = ctx.cfg.fused_dispatch
+        fused = self._fused
         skipped: set[int] = set()  # active areas deferred this tick (link dry)
         opened: list[Area] = []  # epochs opened this tick (fused: batch begin)
         forced: list[Area] = []  # escalations this tick (fused: batch force)
@@ -142,7 +171,21 @@ class DispatchStage:
             ctx.queue.appendleft(area)
         for area in reversed(blocked):
             ctx.queue.appendleft(area)
-        if fused:
+        if self._mode == "megastep":
+            # The whole tick — staged commits, begins, zeros, forces, copies —
+            # crosses the host/device boundary as ONE program.  Phase order
+            # inside the program matches the batched generation's cross-
+            # program order; the quarantine note below applies identically.
+            with ctx.telemetry.stage(
+                "dispatch.device",
+                opened=len(opened),
+                forced=len(forced),
+                copy_chunks=len(plan),
+                huge_runs=len(run_plan),
+                committed=len(self._staged_small) + len(self._staged_huge),
+            ):
+                self._dispatch_megastep(opened, zeros, forced, plan, run_plan)
+        elif fused:
             # Device order matters: begin before copy (epoch flags gate dirty
             # tracking), force before copy (a forced block's freed source slot
             # may be reallocated as a copy destination next tick), zero-fill
@@ -249,7 +292,7 @@ class DispatchStage:
             # pay the kernel's zero-fill pass before their copy/force lands.
             # Fused: one batched zero program per tick, sequenced before the
             # force/copy batches; legacy: immediate, in open order.
-            if cfg.fused_dispatch:
+            if self._fused:
                 zeros.append(area)
             else:
                 self._dispatch_zero_fill(area)
@@ -269,7 +312,7 @@ class DispatchStage:
                 attempts=area.attempts,
                 forced=True,
             )
-            if cfg.fused_dispatch:
+            if self._fused:
                 forced.append(area)  # device dispatch batched at end of tick
             else:
                 ctx.state = migrator.force_migrate(
@@ -284,7 +327,7 @@ class DispatchStage:
         ctx.telemetry.request_phase(
             area.request_id, "EPOCH_OPEN", n=len(area), attempts=area.attempts
         )
-        if cfg.fused_dispatch:
+        if self._fused:
             opened.append(area)  # begin batched at end of tick, before copies
         else:
             ctx.state = migrator.begin_area(ctx.state, jax.numpy.asarray(area.block_ids))
@@ -318,7 +361,7 @@ class DispatchStage:
         ctx.telemetry.request_phase(
             area.request_id, "EPOCH_OPEN", n=len(area), attempts=area.attempts, huge=True
         )
-        if ctx.cfg.fused_dispatch:
+        if self._fused:
             opened.append(area)  # members share the tick's begin batch
         else:
             ctx.state = migrator.begin_area(ctx.state, jax.numpy.asarray(area.block_ids))
@@ -335,7 +378,7 @@ class DispatchStage:
         # one out to a later open this tick would let that area's batched
         # zero/force/copy write the slot before this force has read it.
         ctx = self.ctx
-        if ctx.cfg.fused_dispatch:
+        if self._fused:
             ids = area.block_ids
             self._freed.append(ctx.table[ids].copy())
             ctx.table[ids, REGION] = area.dst_region
@@ -344,6 +387,244 @@ class DispatchStage:
         else:
             ctx.remap_host(area.block_ids, area.dst_region, area.dst_slots)
         self.accounting.credit(area, forced=len(area))
+
+    # -- megastep dispatch (one program per tick) ---------------------------
+
+    def _warm_megastep(self) -> None:
+        """Ahead-of-time compile the steady-state megastep variants.
+
+        The budget-floored shared bucket fixes every steady-state operand
+        shape before any workload runs, so the drain-loop signatures —
+        ``(begin, copy)`` on opening ticks, ``(commit, begin, copy)`` at
+        steady state, ``(commit,)`` on the tail — can compile at pool-attach
+        time.  Each warm call is a semantic no-op: per-block operands are
+        all OUT-OF-BOUNDS sentinels (scatters dropped, gather results
+        unread) and copy lanes are slot-0 self-copies.  Runs inside driver
+        construction, before the jit-miss baseline snapshot, so warmed
+        compiles never count against ``MigrationStats.jit_cache_misses``.
+        """
+        ctx = self.ctx
+        G = ctx.pool_cfg.huge_factor
+        B = self._megastep_bucket(0)
+        n_blocks = len(ctx.table)
+        j = jax.numpy.asarray
+        sent = j(np.full(B, n_blocks, np.int32))  # OOB block ids: all no-op
+        regions = j(np.full(B, ctx.pool_cfg.n_regions, np.int32))
+        slots = j(np.full(B, ctx.pool_cfg.slots_per_region, np.int32))
+        self_copy = j(np.zeros(B, np.int32))
+        empty = j(np.zeros(0, np.int32))
+        signatures = [
+            ("commit",),
+            ("begin", "copy"),
+            ("commit", "begin", "copy"),
+        ]
+        if G > 1:
+            # Two-tier pool: the run-copy / group-commit tick shapes, at
+            # their own floored bucket (budget / G groups per tick).
+            signatures += [
+                ("groups",),
+                ("begin", "runs"),
+                ("groups", "begin", "runs"),
+                ("groups", "begin", "copy"),
+            ]
+        gb = bucket_size(
+            max(1, ctx.cfg.budget_blocks_per_tick // G), ctx.cfg.bucket_growth
+        )
+        g_sent = j(np.full(gb * G, n_blocks, np.int32))  # OOB member ids
+        g_regions = j(np.full(gb, ctx.pool_cfg.n_regions, np.int32))
+        g_starts = j(np.full(gb, ctx.pool_cfg.slots_per_region, np.int32))
+        r_self = j(np.zeros(gb, np.int32))
+        for sig in signatures:
+            ctx.state, _, _ = migrator.megastep(
+                ctx.state,
+                sent if "commit" in sig else empty,
+                regions if "commit" in sig else empty,
+                slots if "commit" in sig else empty,
+                g_sent if "groups" in sig else empty,
+                g_regions if "groups" in sig else empty,
+                g_starts if "groups" in sig else empty,
+                sent if "begin" in sig else empty,
+                empty,
+                empty,
+                empty,
+                empty,
+                self_copy if "copy" in sig else empty,
+                self_copy if "copy" in sig else empty,
+                r_self if "runs" in sig else empty,
+                r_self if "runs" in sig else empty,
+                group=G,
+                impl=ctx.cfg.copy_impl,
+            )
+
+    def _megastep_bucket(self, *lengths: int) -> int:
+        """Shared bucket for every per-block megastep operand.
+
+        Floored at the steady-state tick budget so a drain's every tick —
+        and every retry-storm tick, whose fragmented batches are no longer
+        than the budget — rounds up to the SAME bucket: after warmup one
+        compiled variant serves the whole run.
+        """
+        ctx = self.ctx
+        floor = max(1, min(ctx.cfg.budget_blocks_per_tick, len(ctx.table)))
+        return bucket_size(max(max(lengths), floor), ctx.cfg.bucket_growth)
+
+    @staticmethod
+    def _pad_sentinel(arr: np.ndarray, bucket: int, sentinel: int) -> np.ndarray:
+        out = np.full(bucket, sentinel, dtype=np.int32)
+        out[: len(arr)] = arr
+        return out
+
+    def _dispatch_megastep(
+        self,
+        opened: list[Area],
+        zeros: list[Area],
+        forced: list[Area],
+        plan: list[tuple[Area, np.ndarray, np.ndarray]],
+        run_plan: list[Area],
+    ) -> None:
+        """Assemble and fire the tick's single device program.
+
+        An EMPTY phase ships a shape-``(0,)`` operand and compiles away
+        entirely (trace-time ``if x.shape[0]`` guards in the program), so a
+        quiet drain never pays padded force-lane payload gathers and the
+        commit-only final tick compiles a lean tail variant.  A NONEMPTY
+        phase pads to the shared budget-floored bucket with OUT-OF-BOUNDS
+        sentinels (block ids -> N, regions -> R, slots -> S, flat ids ->
+        R*S): JAX drops out-of-bounds scatter rows and clamps out-of-bounds
+        gather indices, so a padded lane performs no state update and its
+        garbage verdict lane is never read (the host slices verdicts by real
+        offsets).  One bucket per phase keeps the variant space to
+        phases-present x B rather than a cross product of lengths.  The
+        kernel copy operands instead replicate lane 0 — Pallas
+        scalar-prefetched index maps must stay in bounds — so padded copy
+        lanes re-copy a real lane (idempotent).  An idle tick — nothing
+        staged, nothing scheduled — dispatches nothing at all.
+        """
+        ctx = self.ctx
+        small, huge = self._staged_small, self._staged_huge
+        self._staged_small, self._staged_huge = [], []
+        if not (small or huge or opened or zeros or forced or plan or run_plan):
+            return
+        pc = ctx.pool_cfg
+        S = pc.slots_per_region
+        n_blocks = len(ctx.table)
+        G = pc.huge_factor
+
+        def cat(parts: list[np.ndarray]) -> np.ndarray:
+            if not parts:
+                return np.zeros(0, np.int32)
+            return np.concatenate(parts).astype(np.int32, copy=False)
+
+        commit_ids = cat([a.block_ids for a in small])
+        commit_regions = cat([np.full(len(a), a.dst_region, np.int32) for a in small])
+        commit_slots = cat([a.dst_slots for a in small])
+        offsets = np.cumsum([0] + [len(a) for a in small])
+        begin_ids = cat([a.block_ids for a in opened])
+        zero_flat = cat([a.dst_region * S + a.dst_slots for a in zeros])
+        force_ids = cat([a.block_ids for a in forced])
+        force_regions = cat([np.full(len(a), a.dst_region, np.int32) for a in forced])
+        force_slots = cat([a.dst_slots for a in forced])
+        # Copy plan: flat slot ids from the exact host mirror — table entries
+        # of in-flight blocks cannot change until their commit, which this
+        # driver issues (and this tick's commits target disjoint blocks).
+        copy_ids = cat([ids for _, ids, _ in plan])
+        copy_regions = cat(
+            [np.full(len(c), a.dst_region, np.int32) for a, c, _ in plan]
+        )
+        copy_slots = cat([s for _, _, s in plan])
+        copy_src = (ctx.table[copy_ids, REGION] * S + ctx.table[copy_ids, SLOT]).astype(
+            np.int32
+        )
+        copy_dst = (copy_regions * S + copy_slots).astype(np.int32)
+        if len(copy_ids):
+            ctx.count("bytes_copied", len(copy_ids) * pc.block_bytes)
+
+        B = self._megastep_bucket(
+            len(commit_ids),
+            len(begin_ids),
+            len(zero_flat),
+            len(force_ids),
+            len(copy_src),
+        )
+        pad = self._pad_sentinel
+        if len(commit_ids):
+            commit_ids = pad(commit_ids, B, n_blocks)
+            commit_regions = pad(commit_regions, B, pc.n_regions)
+            commit_slots = pad(commit_slots, B, S)
+        if len(begin_ids):
+            begin_ids = pad(begin_ids, B, n_blocks)
+        if len(zero_flat):
+            zero_flat = pad(zero_flat, B, pc.n_regions * S)
+        if len(force_ids):
+            force_ids = pad(force_ids, B, n_blocks)
+            force_regions = pad(force_regions, B, pc.n_regions)
+            force_slots = pad(force_slots, B, S)
+        if len(copy_src):
+            copy_src, copy_dst = pad_to_bucket(B, copy_src, copy_dst)
+
+        # Huge-tier buckets are floored at the tick's huge capacity
+        # (budget / G groups), mirroring the per-block floor: every
+        # group-commit and run-copy tick shares one compiled variant.
+        huge_floor = max(1, ctx.cfg.budget_blocks_per_tick // G)
+        k = len(huge)
+        if k:
+            kb = bucket_size(max(k, huge_floor), ctx.cfg.bucket_growth)
+            members = np.concatenate([a.block_ids for a in huge]).reshape(k, G)
+            members = np.concatenate(
+                [members, np.repeat(members[:1], kb - k, axis=0)]
+            )
+            grp_members = members.reshape(-1).astype(np.int32)
+            grp_regions, grp_starts = pad_to_bucket(
+                kb,
+                np.asarray([a.dst_region for a in huge], np.int32),
+                np.asarray([a.dst_slots[0] for a in huge], np.int32),
+            )
+        else:
+            grp_members = grp_regions = grp_starts = np.zeros(0, np.int32)
+        if run_plan:
+            firsts = np.asarray([a.block_ids[0] for a in run_plan])
+            run_src = (
+                ctx.table[firsts, REGION] * S + ctx.table[firsts, SLOT]
+            ).astype(np.int32)
+            run_dst = np.asarray(
+                [a.dst_region * S + a.dst_slots[0] for a in run_plan], np.int32
+            )
+            rb = bucket_size(max(len(run_plan), huge_floor), ctx.cfg.bucket_growth)
+            run_src, run_dst = pad_to_bucket(rb, run_src, run_dst)
+            nbytes = len(run_plan) * G * pc.block_bytes
+            ctx.count("bytes_copied", nbytes)
+            ctx.count("bytes_copied_huge", nbytes)
+        else:
+            run_src = run_dst = np.zeros(0, np.int32)
+
+        j = jax.numpy.asarray
+        ctx.state, verdict_small, verdict_groups = migrator.megastep(
+            ctx.state,
+            j(commit_ids),
+            j(commit_regions),
+            j(commit_slots),
+            j(grp_members),
+            j(grp_regions),
+            j(grp_starts),
+            j(begin_ids),
+            j(zero_flat),
+            j(force_ids),
+            j(force_regions),
+            j(force_slots),
+            j(copy_src),
+            j(copy_dst),
+            j(run_src),
+            j(run_dst),
+            group=G,
+            impl=ctx.cfg.copy_impl,
+        )
+        ctx.count("dispatches", 1, program="megastep")
+        for a in small + huge:
+            ctx.active.remove(a)
+        if small:
+            ctx.pending.append(CommitBatch(small, offsets, verdict_small))
+        if huge:
+            ctx.pending.append(CommitBatch(huge, np.arange(k + 1), verdict_groups))
 
     # -- batched dispatch (fused path) -------------------------------------
 

@@ -1,12 +1,22 @@
 """Verdict stage: harvest commit verdicts, split/demote/credit outcomes.
 
-Commit dispatches return packed dirty vectors; this stage harvests them
-(opportunistically, or blocking) and resolves each area: clean blocks remap
-in the host mirror and credit their request (or continue to a relay's
-second hop), dirty blocks free their reserved slots and requeue smaller
-(paper §4.2 adaptive splitting), a rejected huge run retries whole or
-demotes to small granularity, and cancelled requests drop their dirty
-remainders instead of retrying.
+This stage is the pipeline's ONLY device→host synchronization point.
+Commit dispatches — the batched ``commit_areas``/``commit_groups``
+programs, or the commit phase of the megastep (DESIGN.md §12) — return
+packed dirty vectors that stay on device, wrapped in ``CommitBatch``
+futures on ``ctx.pending``.  Harvest materializes them opportunistically
+(``is_ready()`` first, so a tick never stalls on an unfinished verdict)
+or blocking at drain, always at least one tick after the commit was
+dispatched: the copy→remap race window of §2 closes asynchronously, off
+the tick's critical path.  Everything downstream of the fetch is host-side
+bookkeeping over exact mirrors — no further device round-trips.
+
+Per area, the packed vector resolves as: clean blocks remap in the host
+mirror and credit their request (or continue to a relay's second hop),
+dirty blocks free their reserved slots and requeue smaller (paper §4.2
+adaptive splitting), a rejected huge run retries whole or demotes to
+small granularity, and cancelled requests drop their dirty remainders
+instead of retrying.
 """
 
 from __future__ import annotations

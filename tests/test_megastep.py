@@ -1,0 +1,239 @@
+"""Megastep dispatch: the single-dispatch tick (DESIGN.md §12).
+
+Covers the acceptance criteria of the device-resident tick loop:
+  * the single-dispatch invariant — a warm fused-megastep drain issues at
+    most one device program per tick (``dispatches_per_tick`` ~ 1.0),
+  * verdict-carry correctness — megastep, batched, and legacy dispatch
+    produce the same logical outcome on identical seeds (and megastep vs
+    batched the bit-identical physical pool), with per-request accounting
+    closure on every path,
+  * jit-cache stability — a retry storm's fragmented batch lengths all
+    round up to the shared floored bucket, so megastep compiles a bounded
+    number of variants after warmup,
+  * the config tri-state (``LeapConfig.fused_dispatch`` / ``dispatch_mode``)
+    including the ppermute fallback.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    LeapConfig,
+    MigrationDriver,
+    PoolConfig,
+    init_state,
+    leap_write,
+    migrator,
+)
+
+
+def make(n_regions=2, slots=64, n_blocks=32, block_shape=(4,), seed=0):
+    cfg = PoolConfig(n_regions, slots, block_shape)
+    state = init_state(cfg, n_blocks, np.zeros(n_blocks, np.int32))
+    rng = np.random.default_rng(seed)
+    data = rng.normal(size=(n_blocks,) + block_shape).astype(np.float32)
+    state = leap_write(state, jnp.arange(n_blocks), jnp.asarray(data))
+    return cfg, state, data
+
+
+def _run_interleaved(mode, seed=3, n_blocks=32):
+    """Identical request + write schedule under a given dispatch mode."""
+    cfg, state, data = make(n_blocks=n_blocks, slots=n_blocks * 2, seed=seed)
+    drv = MigrationDriver(
+        state,
+        cfg,
+        LeapConfig(
+            initial_area_blocks=8,
+            chunk_blocks=4,
+            budget_blocks_per_tick=8,
+            max_attempts_before_force=3,
+            fused_dispatch=mode,
+        ),
+    )
+    session = drv.default_session()
+    session.leap(np.arange(n_blocks), 1)
+    rng = np.random.default_rng(seed)
+    expected = data.copy()
+    steps = 0
+    while not drv.done and steps < 1000:
+        drv.tick()
+        ids = rng.choice(n_blocks, size=2, replace=False)
+        vals = rng.normal(size=(2, 4)).astype(np.float32)
+        drv.write(jnp.asarray(ids), jnp.asarray(vals))
+        expected[ids] = vals
+        steps += 1
+    assert session.drain()
+    return drv, expected
+
+
+# ---------------------------------------------------------------------------
+# Config tri-state
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_mode_tri_state():
+    assert LeapConfig().dispatch_mode == "megastep"
+    assert LeapConfig(fused_dispatch=True).dispatch_mode == "megastep"
+    assert LeapConfig(fused_dispatch="megastep").dispatch_mode == "megastep"
+    assert LeapConfig(fused_dispatch="batched").dispatch_mode == "batched"
+    assert LeapConfig(fused_dispatch=False).dispatch_mode == "legacy"
+    assert LeapConfig(fused_dispatch="legacy").dispatch_mode == "legacy"
+    with pytest.raises(ValueError):
+        LeapConfig(fused_dispatch="warp")
+
+
+def test_megastep_falls_back_to_batched_on_ppermute():
+    """shard_map programs have static (src, dst) endpoints: they cannot fuse
+    into one variant-stable program, so megastep demotes to batched there."""
+    cfg = LeapConfig(fused_dispatch=True, backend="ppermute")
+    assert cfg.dispatch_mode == "batched"
+    # an explicit legacy request survives the backend
+    assert LeapConfig(fused_dispatch=False, backend="ppermute").dispatch_mode == "legacy"
+
+
+# ---------------------------------------------------------------------------
+# The single-dispatch invariant
+# ---------------------------------------------------------------------------
+
+
+def test_single_dispatch_per_tick_on_drain():
+    """fig9-style drain under megastep: at most ONE device program per tick
+    (idle/harvest-only ticks dispatch nothing, so the ratio sits at or just
+    under 1.0 — never above)."""
+    cfg, state, _ = make(n_blocks=128, slots=256)
+    drv = MigrationDriver(
+        state,
+        cfg,
+        LeapConfig(initial_area_blocks=64, chunk_blocks=16, budget_blocks_per_tick=64),
+    )
+    drv.default_session().leap(np.arange(128), 1)
+    assert drv.drain()
+    assert drv.stats.ticks > 0
+    assert drv.stats.dispatches <= drv.stats.ticks
+    assert 0.0 < drv.stats.dispatches_per_tick <= 1.0
+    assert drv.verify_mirror()
+
+
+def test_idle_ticks_dispatch_nothing():
+    cfg, state, _ = make(n_blocks=8, slots=16)
+    drv = MigrationDriver(state, cfg, LeapConfig())
+    for _ in range(5):
+        drv.tick()
+    assert drv.stats.ticks == 5 and drv.stats.dispatches == 0
+
+
+# ---------------------------------------------------------------------------
+# Verdict-carry correctness across dispatch generations
+# ---------------------------------------------------------------------------
+
+
+def test_megastep_matches_batched_and_legacy_under_writes():
+    drv_m, exp_m = _run_interleaved("megastep")
+    drv_b, exp_b = _run_interleaved("batched")
+    drv_l, exp_l = _run_interleaved("legacy")
+    for drv, expected in ((drv_m, exp_m), (drv_b, exp_b), (drv_l, exp_l)):
+        assert (drv.host_placement() == 1).all()
+        assert drv.verify_mirror()
+        np.testing.assert_array_equal(np.asarray(drv.read(np.arange(32))), expected)
+    # same write schedule => identical logical outcome on all three paths
+    np.testing.assert_array_equal(exp_m, exp_b)
+    np.testing.assert_array_equal(exp_m, exp_l)
+    # megastep and batched make byte-identical scheduling decisions, so the
+    # physical pools (slot placement included) match bit for bit
+    np.testing.assert_array_equal(np.asarray(drv_m.state.pool), np.asarray(drv_b.state.pool))
+    np.testing.assert_array_equal(np.asarray(drv_m.state.table), np.asarray(drv_b.state.table))
+    # and the megastep pays no more dispatches than either prior generation
+    assert drv_m.stats.dispatches <= drv_b.stats.dispatches
+    assert drv_m.stats.dispatches < drv_l.stats.dispatches
+
+
+def test_accounting_closure_every_mode():
+    """committed + forced + cancelled == requested at termination, and the
+    retry traffic the stats report covers the re-copied bytes, on all paths."""
+    for mode in ("megastep", "batched", "legacy"):
+        drv, _ = _run_interleaved(mode, seed=7)
+        for req in drv.requests.values():
+            assert req.done
+            assert req.committed + req.forced + req.cancelled == req.requested
+        s = drv.stats
+        assert s.blocks_migrated + s.blocks_forced + s.blocks_cancelled == s.blocks_requested
+
+
+def test_megastep_huge_tier_drain():
+    """Two-tier pool under megastep: grouped commits and contiguous-run
+    copies ride the same single dispatch."""
+    G = 4
+    cfg = PoolConfig(2, 32, (4,), huge_factor=G)
+    n_blocks = 16
+    state = init_state(cfg, n_blocks, np.zeros(n_blocks, np.int32))
+    rng = np.random.default_rng(5)
+    data = rng.normal(size=(n_blocks, 4)).astype(np.float32)
+    state = leap_write(state, jnp.arange(n_blocks), jnp.asarray(data))
+    drv = MigrationDriver(state, cfg, LeapConfig(initial_area_blocks=8))
+    drv.adopt_huge(np.arange(n_blocks // G))
+    drv.default_session().leap(np.arange(n_blocks), 1)
+    assert drv.drain()
+    assert (drv.host_placement() == 1).all()
+    assert drv.verify_mirror()
+    np.testing.assert_array_equal(np.asarray(drv.read(np.arange(n_blocks))), data)
+    assert drv.stats.huge_areas_committed > 0
+    assert 0.0 < drv.stats.dispatches_per_tick <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Jit-cache stability under a retry storm
+# ---------------------------------------------------------------------------
+
+
+def test_megastep_cache_stable_under_retry_storm():
+    """However the splitter fragments the work, every megastep operand pads
+    to the budget-floored shared bucket: the storm compiles a handful of
+    variants, not one per batch-length combination."""
+    before = migrator.program_cache_sizes()["megastep"]
+    for seed in (21, 22):
+        cfg, state, data = make(n_blocks=64, slots=128, seed=seed)
+        drv = MigrationDriver(
+            state,
+            cfg,
+            LeapConfig(
+                initial_area_blocks=16,
+                budget_blocks_per_tick=64,
+                max_attempts_before_force=4,
+            ),
+        )
+        drv.default_session().leap(np.arange(64), 1)
+        rng = np.random.default_rng(seed)
+        steps = 0
+        while not drv.done and steps < 2000:
+            drv.tick()
+            ids = rng.choice(64, size=4, replace=False)
+            drv.write(jnp.asarray(ids), jnp.asarray(rng.normal(size=(4, 4)).astype(np.float32)))
+            steps += 1
+        assert drv.drain()
+        assert drv.verify_mirror()
+        assert drv.stats.dirty_rejections > 0, "workload must exercise splitting"
+    after = migrator.program_cache_sizes()["megastep"]
+    # the floored bucket admits the steady-state shape plus at most the
+    # force-overflow shape (forces are budget-exempt, so a force batch can
+    # exceed the budget floor and round up one bucket)
+    assert after - before <= 3, (before, after)
+    # driver-level stat agrees: bounded compiles despite the length storm
+    assert drv.stats.jit_cache_misses <= 6
+
+
+def test_megastep_warm_ticks_do_not_recompile():
+    """Second drain on an identically shaped pool: zero new megastep
+    variants (the warm path the fig9 bench gates)."""
+    cfg, state, _ = make(n_blocks=32, slots=64, seed=31)
+    drv = MigrationDriver(state, cfg, LeapConfig(budget_blocks_per_tick=16))
+    drv.default_session().leap(np.arange(32), 1)
+    assert drv.drain()
+    before = migrator.program_cache_sizes()["megastep"]
+    cfg2, state2, _ = make(n_blocks=32, slots=64, seed=32)
+    drv2 = MigrationDriver(state2, cfg2, LeapConfig(budget_blocks_per_tick=16))
+    drv2.default_session().leap(np.arange(32), 0)  # opposite direction, same shapes
+    drv2.default_session().leap(np.arange(32), 1)
+    assert drv2.drain()
+    assert migrator.program_cache_sizes()["megastep"] == before
+    assert drv2.stats.jit_cache_misses == 0

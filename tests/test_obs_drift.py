@@ -12,6 +12,8 @@ Deterministic seeded sweep runs in tier-1; the Hypothesis exploration at
 the bottom is importorskip'd like the rest of the generative chaos suite.
 """
 
+import dataclasses
+
 import pytest
 
 from repro.chaos import ChaosDriver, sample_spec
@@ -71,6 +73,35 @@ def test_seeded_chaos_scenarios_never_drift(seed):
     assert report.completed
     assert chaos.driver.stats.blocks_requested > 0  # scenario actually moved
     _assert_no_drift(chaos.driver)
+
+
+@pytest.mark.parametrize("mode", ["legacy", "batched"])
+def test_seeded_chaos_never_drifts_on_prior_dispatch_generations(mode):
+    # sample_spec defaults to megastep (covered above); the same scenario
+    # must stay drift-free when replayed on the earlier dispatch paths.
+    chaos = ChaosDriver(dataclasses.replace(sample_spec(2), dispatch=mode))
+    report = chaos.run()
+    assert report.completed
+    _assert_no_drift(chaos.driver)
+
+
+def test_megastep_counts_one_dispatch_per_device_sync():
+    """The megastep is ONE dispatch, counted once — both in MigrationStats
+    and in the telemetry counter log — however many phases it fuses; ticks
+    never see more than one `dispatches` increment under megastep."""
+    chaos = ChaosDriver(sample_spec(3))
+    report = chaos.run()
+    assert report.completed
+    driver = chaos.driver
+    assert driver.stats.dispatches <= driver.stats.ticks
+    per_program = [
+        ev for ev in driver.telemetry.events()
+        if ev["kind"] == "counter" and ev["name"] == "dispatches"
+    ]
+    assert per_program, "scenario must dispatch"
+    assert all(ev["n"] == 1 for ev in per_program)
+    assert {ev["args"]["program"] for ev in per_program} == {"megastep"}
+    _assert_no_drift(driver)
 
 
 def test_drift_check_survives_ring_eviction():

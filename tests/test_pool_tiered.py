@@ -85,14 +85,15 @@ def test_huge_read_returns_contiguous_payload():
 
 def test_huge_block_migrates_as_single_run_copy():
     """Acceptance: a huge block goes through the fused dispatch path as ONE
-    contiguous-run copy — 3 dispatches total (begin / copy_runs / commit
-    groups), all bytes through the run program, and one all-or-nothing
+    contiguous-run copy — under megastep dispatch, 2 programs total (one
+    megastep carrying begin + the run copy, one carrying the grouped
+    commit), all bytes through the run program, and one all-or-nothing
     commit."""
     cfg, drv, data = make_tiered()
     assert drv.request([0], 1) == G  # touching one member migrates the block
     assert drv.drain()
     s = drv.stats
-    assert s.dispatches == 3, "begin + one run copy + one grouped commit"
+    assert s.dispatches == 2, "one begin+run-copy megastep + one commit megastep"
     assert s.huge_areas_committed == 1
     assert s.bytes_copied == s.bytes_copied_huge == G * cfg.block_bytes
     assert s.blocks_migrated == G
