@@ -40,6 +40,7 @@ SUITES = [
     ("fig8_tpch", "run", {}),
     ("fig9_dispatch", "run", {}),
     ("fig10_topology", "run", {}),
+    ("fig11_tiering", "run", {}),
     ("serving_rebalance", "run", {}),
     ("serving_slo", "run", {}),
 ]

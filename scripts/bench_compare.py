@@ -96,6 +96,12 @@ DIFF_METRICS = {
     # per-config, so a retry storm that trips novel area shapes — and thus
     # fresh XLA compiles — is visible to the gate, not just in the trace.
     "jit_misses": 2.0,
+    # Tiering loop quality (fig11 rows): hot-tier miss rate in percentage
+    # points (a regressed heat feed or watermark logic shows up as reads
+    # stranded on the far tier) and the ping-pong migration count (a broken
+    # cooldown shows up as churn).  Both deterministic for a fixed policy.
+    "miss": 5.0,
+    "pingpong": 10.0,
 }
 
 _NUM = re.compile(r"^x?(-?\d+(?:\.\d+)?)%?$")

@@ -87,6 +87,10 @@ class PoolFacade:
     def pending_blocks(self) -> int:
         return self._driver.pending_blocks
 
+    def heat(self) -> np.ndarray:
+        """Per-block access heat (copy; all zeros when ``cfg.tiering`` off)."""
+        return self._driver.heat_snapshot()
+
     def snapshot_stats(self):
         """Copy of the driver's :class:`MigrationStats` at this instant
         (deep enough that the per-link dict is independent too)."""
@@ -95,12 +99,19 @@ class PoolFacade:
     def telemetry(self):
         """Read-only :class:`repro.obs.TelemetryView` over the driver's
         recorder.  Everything it returns is a copy or fresh rendering, so
-        the facade stays a pure observation surface."""
+        the facade stays a pure observation surface.  On a pool with a
+        topology the view carries the ``tier_resident_bytes{tier=near|far}``
+        residency gauges (extras stack, so callers may add their own)."""
         from repro.obs import TelemetryView  # deferred: keep facade import-light
 
-        return TelemetryView(
+        view = TelemetryView(
             self._driver.telemetry, lambda: self._driver.stats.snapshot()
         )
+        if self._driver.topology is not None:
+            from repro.tiering import residency_extra
+
+            view = view.with_extra(residency_extra(self._driver))
+        return view
 
     # -- debug invariants (read-only checks; safe to expose) ---------------
 

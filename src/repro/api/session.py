@@ -168,10 +168,10 @@ class LeapSession:
         """Telemetry accessor for this session's driver: buffered events,
         exact counters, request spans, metrics (JSON / Prometheus text),
         Chrome trace export.  Always usable — with ``LeapConfig.telemetry``
-        off it reports ``enabled=False`` and empty data."""
-        return TelemetryView(
-            self.driver.telemetry, lambda: self.driver.stats.snapshot()
-        )
+        off it reports ``enabled=False`` and empty data.  Delegates to the
+        facade, which attaches the tier-residency gauges when the pool has
+        a topology."""
+        return self.facade.telemetry()
 
     @property
     def done(self) -> bool:

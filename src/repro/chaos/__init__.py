@@ -26,7 +26,11 @@ from repro.chaos.driver import (
     run_scenario,
     run_with_repro,
 )
-from repro.chaos.invariants import InvariantChecker, InvariantViolation
+from repro.chaos.invariants import (
+    HysteresisMonitor,
+    InvariantChecker,
+    InvariantViolation,
+)
 from repro.chaos.sabotage import SABOTAGES, apply_sabotage
 from repro.chaos.spec import EVENT_KINDS, FaultEvent, ScenarioSpec
 from repro.chaos.strategies import sample_spec, sabotage_specs, scenario_specs
@@ -37,6 +41,7 @@ __all__ = [
     "ChaosDriver",
     "ChaosReport",
     "FaultEvent",
+    "HysteresisMonitor",
     "InvariantChecker",
     "InvariantViolation",
     "ScenarioSpec",

@@ -31,7 +31,7 @@ import os
 import jax.numpy as jnp
 import numpy as np
 
-from repro.chaos.invariants import InvariantChecker, InvariantViolation
+from repro.chaos.invariants import HysteresisMonitor, InvariantChecker, InvariantViolation
 from repro.chaos.sabotage import apply_sabotage
 from repro.chaos.spec import ScenarioSpec
 from repro.core import LeapConfig, MigrationDriver, PoolConfig, init_state, leap_write
@@ -116,6 +116,7 @@ class ChaosDriver:
             max_attempts_before_force=spec.max_attempts_before_force,
             demote_after_attempts=spec.demote_after_attempts,
             fused_dispatch=spec.dispatch,
+            tiering=spec.tiering,
             # Always record under chaos: a failing run dumps its trace next
             # to the repro spec, and the drift property test replays the
             # event log against MigrationStats.
@@ -127,6 +128,7 @@ class ChaosDriver:
         self.session = self.driver.default_session()
         self.shadow = data.copy()
         self.checker = InvariantChecker(self.driver, self.shadow)
+        self._attach_tiering()
         if sabotage is not None:
             apply_sabotage(self.driver, sabotage)
 
@@ -151,6 +153,7 @@ class ChaosDriver:
             max_attempts_before_force=spec.max_attempts_before_force,
             demote_after_attempts=spec.demote_after_attempts,
             fused_dispatch=spec.dispatch,
+            tiering=spec.tiering,
             telemetry=True,
         )
         self.engine = PagedEngine(
@@ -186,6 +189,47 @@ class ChaosDriver:
         self.generator = LoadGenerator(
             self.engine, wl, scheduler=self.driver.scheduler
         )
+        self._attach_tiering()
+
+    def _attach_tiering(self) -> None:
+        """Build the TieringPolicy (+ hysteresis monitor where it's armed).
+
+        The policy needs a topology to tier against; on a uniform mesh
+        ``split_tiers`` finds no far tier and ``decide`` no-ops, so the flag
+        still exercises the heat plane + megastep heat phase.  The
+        ``tiering_hysteresis`` monitor is armed only under the
+        ``working_set_shift`` workload, where the policy is the sole source
+        of migrations — elsewhere workload-driven leaps would trip it by
+        design, not by bug.
+        """
+        spec = self.spec
+        self.tiering_policy = None
+        self.hysteresis = None
+        if not spec.tiering or self.driver.topology is None:
+            return
+        from repro.tiering import TieringConfig, TieringPolicy
+
+        cooldown = 12
+        self.tiering_policy = TieringPolicy(
+            self.driver,
+            TieringConfig(
+                hot_watermark=1.0,
+                cold_watermark=0.3,
+                cooldown_ticks=cooldown,
+                epoch_ticks=spec.tier_epoch,
+                max_promotions=8,
+                max_demotions=4,
+            ),
+        )
+        if spec.workload == "working_set_shift":
+            window = 32
+            self.hysteresis = HysteresisMonitor(
+                self.driver.host_placement(),
+                window=window,
+                # policy bound under the cooldown, plus one in-flight fault
+                # landing after a phase-shift reset
+                max_moves=(window - 1) // cooldown + 2,
+            )
 
     def _check_serving(self) -> None:
         """Per-tenant accounting closure, surfaced as a standing invariant."""
@@ -212,14 +256,30 @@ class ChaosDriver:
         h = self.session.leap(np.asarray(ids, np.int32), int(dst), priority=priority)
         self.handles.append(h)
 
+    def _shift_reads(self, t: int) -> np.ndarray:
+        """working_set_shift: uniform reads over the tick's rotated hot set."""
+        spec = self.spec
+        n = spec.n_blocks
+        hot_n = max(1, int(round(spec.hot_frac * n)))
+        start = ((t // spec.shift_every) * hot_n) % n
+        hot = (start + np.arange(hot_n)) % n
+        return hot[self.rng.integers(0, hot_n, size=spec.reads_per_tick)].astype(np.int32)
+
     def _step_workload(self, t: int) -> None:
         spec = self.spec
         if spec.workload == "serving":
             # The generator's step admits, decodes, churns AND runs the
             # engine's migration tick — run() must not tick again.
             self.generator.step()
+            self._tiering_epoch()
             return
-        if spec.workload == "drain" and t == 0:
+        if spec.workload == "working_set_shift":
+            if t and t % spec.shift_every == 0 and self.hysteresis is not None:
+                self.hysteresis.phase_shift()  # rotation legitimately re-tiers
+            # reads only feed the heat plane (no-op with tiering off); the
+            # tiering policy is this workload's only source of migrations
+            self.driver.note_reads(self._shift_reads(t))
+        elif spec.workload == "drain" and t == 0:
             self._leap(np.arange(spec.n_blocks), spec.n_regions - 1,
                        priority=DRAIN_TARGET_PRIORITY)
         elif spec.workload == "exchange" and t == 0:
@@ -240,6 +300,11 @@ class ChaosDriver:
             )
         if spec.writes_per_tick:
             self._write_random(spec.writes_per_tick)
+        self._tiering_epoch()
+
+    def _tiering_epoch(self) -> None:
+        if self.tiering_policy is not None:
+            self.handles.extend(self.tiering_policy.maybe_apply(self.session))
 
     def _write_random(self, k: int) -> None:
         spec = self.spec
@@ -302,6 +367,8 @@ class ChaosDriver:
             self._leap(ids, fullest)
         else:  # pragma: no cover - validate() rejects unknown kinds
             raise ValueError(f"unknown fault kind {ev.kind!r}")
+        if self.hysteresis is not None:
+            self.hysteresis.phase_shift()  # faults legitimately re-tier blocks
         self.events_fired.append(f"t{self.driver.stats.ticks}:{ev.kind}")
 
     # -- the run -------------------------------------------------------------
@@ -317,6 +384,8 @@ class ChaosDriver:
             if self.generator is None:
                 self.session.tick()  # serving: the generator already ticked
             self.session.poll()
+            if self.hysteresis is not None:
+                self.hysteresis.observe(t, self.driver.host_placement())
             self.checker.check_all(payload=(t % spec.payload_every == 0))
             self._check_serving()
         completed = self.session.drain(max_ticks=drain_ticks)

@@ -24,6 +24,15 @@ the baseline tests all enforce the same conservation/integrity rules:
               *silent* corruption the structural invariants cannot see
               (e.g. the pre-quarantine same-tick slot-reuse bug, where the
               mirrors stayed exact while payloads read back as zeros).
+  tiering_hysteresis
+              (:class:`HysteresisMonitor`, armed by scenarios where the
+              tiering policy is the only migration source) No block changes
+              region more than ``max_moves`` times inside any ``window``-
+              tick span without an intervening *phase shift* — a hot-set
+              rotation or a fault event, both of which legitimately re-tier
+              blocks and reset the history.  Catches a broken cooldown: the
+              ping-pong churn :class:`TieringConfig.cooldown_ticks` exists
+              to prevent.
 
 Violations raise :class:`InvariantViolation` (an ``AssertionError``
 subclass, so plain pytest suites can use the checker directly).
@@ -42,6 +51,46 @@ class InvariantViolation(AssertionError):
     def __init__(self, invariant: str, message: str):
         self.invariant = invariant
         super().__init__(f"[{invariant}] {message}")
+
+
+class HysteresisMonitor:
+    """Standing ``tiering_hysteresis`` invariant over observed placement.
+
+    Feed it the live placement once per tick (:meth:`observe` diffs against
+    the previous tick to detect migrations) and call :meth:`phase_shift`
+    whenever the workload legitimately re-tiers blocks — a hot-set rotation
+    or a fault event — which clears the per-block move history.  Between
+    phase shifts, a block accumulating more than ``max_moves`` moves within
+    the trailing ``window`` ticks is ping-ponging: the policy's cooldown
+    bounds moves to ``(window - 1) // cooldown_ticks + 1``, so callers set
+    ``max_moves`` to that bound plus slack for one in-flight fault landing.
+    """
+
+    def __init__(self, placement: np.ndarray, window: int = 32, max_moves: int = 4):
+        self.window = int(window)
+        self.max_moves = int(max_moves)
+        self._prev = np.asarray(placement).copy()
+        self._moves: dict[int, list[int]] = {}
+
+    def phase_shift(self) -> None:
+        self._moves.clear()
+
+    def observe(self, tick: int, placement: np.ndarray) -> None:
+        placement = np.asarray(placement)
+        moved = np.nonzero(placement != self._prev)[0]
+        self._prev = placement.copy()
+        for b in moved:
+            ticks = self._moves.setdefault(int(b), [])
+            ticks.append(int(tick))
+            while ticks and ticks[0] <= tick - self.window:
+                ticks.pop(0)
+            if len(ticks) > self.max_moves:
+                raise InvariantViolation(
+                    "tiering_hysteresis",
+                    f"block {int(b)} migrated {len(ticks)} times within "
+                    f"{self.window} ticks (at {ticks}) with no intervening "
+                    f"phase shift — cooldown hysteresis is not holding",
+                )
 
 
 class InvariantChecker:
@@ -175,7 +224,10 @@ class InvariantChecker:
         if expected is None:
             raise ValueError("check_payload needs a shadow copy or an expected array")
         n = int(self.driver.state.n_blocks)
-        actual = np.asarray(self.driver.read(np.arange(n)))
+        # note=False: a whole-pool integrity scan is not workload access —
+        # letting it feed the heat plane would flatten the very signal the
+        # tiering scenarios drive on.
+        actual = np.asarray(self.driver.read(np.arange(n), note=False))
         if not np.array_equal(actual, np.asarray(expected)):
             bad = np.nonzero(
                 (actual.reshape(n, -1) != np.asarray(expected).reshape(n, -1)).any(axis=1)

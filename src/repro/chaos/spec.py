@@ -52,7 +52,7 @@ EVENT_KINDS = (
     "out_of_slots",
 )
 
-WORKLOADS = ("drain", "stream", "exchange", "serving")
+WORKLOADS = ("drain", "stream", "exchange", "serving", "working_set_shift")
 SCHEDULERS = ("leap", "sync", "sampling", "slo")
 DISPATCH_MODES = ("legacy", "batched", "megastep")
 
@@ -115,6 +115,12 @@ class ScenarioSpec:
     budget_blocks_per_tick: int = 4
     max_attempts_before_force: int = 3
     demote_after_attempts: int = 2
+    # Closed-loop tiering (DESIGN.md §13): enables the heat plane + an
+    # epoch-driven TieringPolicy when the topology has a far tier.  Under
+    # the "working_set_shift" workload the policy is the ONLY source of
+    # migrations, which arms the tiering_hysteresis standing invariant.
+    tiering: bool = False
+    tier_epoch: int = 4  # TieringPolicy epoch cadence (ticks)
 
     # -- workload -----------------------------------------------------------
     workload: str = "drain"
@@ -122,6 +128,16 @@ class ScenarioSpec:
     blocks_per_leap: int = 4
     max_priority: int = 3
     writes_per_tick: int = 0  # steady writer mix (blocks touched per tick)
+
+    # -- working-set-shift workload (workload == "working_set_shift") --------
+    # Zipf-free hot-set reads feeding the heat plane: ``reads_per_tick``
+    # uniform draws from a hot set of ``hot_frac * n_blocks`` blocks that
+    # rotates every ``shift_every`` ticks (each rotation is a *phase shift*
+    # for the hysteresis invariant).  No explicit leaps are issued — all
+    # migration comes from the tiering policy (when ``tiering`` is on).
+    shift_every: int = 12
+    hot_frac: float = 0.25
+    reads_per_tick: int = 8
 
     # -- serving workload (workload == "serving") ----------------------------
     # The open-loop multi-tenant load generator (repro.load) drives a real
@@ -173,6 +189,10 @@ class ScenarioSpec:
             raise ValueError("cxl_pooled topology_args must sum to n_regions")
         if self.ticks < 1 or self.payload_every < 1 or self.leap_every < 1:
             raise ValueError("ticks, payload_every and leap_every must be >= 1")
+        if self.shift_every < 1 or self.tier_epoch < 1 or self.reads_per_tick < 1:
+            raise ValueError("shift_every, tier_epoch and reads_per_tick must be >= 1")
+        if not 0.0 < self.hot_frac <= 1.0:
+            raise ValueError("hot_frac must be in (0, 1]")
         if self.workload == "serving":
             if self.serving_rate < 0:
                 raise ValueError("serving_rate must be >= 0")

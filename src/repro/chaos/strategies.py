@@ -14,6 +14,8 @@ module stays importable in environments without it.
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.chaos.spec import ScenarioSpec, FaultEvent
@@ -74,7 +76,19 @@ def sample_spec(seed: int) -> ScenarioSpec:
     # up a real model engine (params init + XLA compiles) per scenario,
     # which would dominate the 250-seed CI sweep's budget.  Serving chaos
     # runs as dedicated test scenarios instead (tests/test_load.py).
-    workload = str(rng.choice(["drain", "stream", "stream", "exchange"]))
+    workload = str(
+        rng.choice(["drain", "stream", "stream", "exchange", "working_set_shift"])
+    )
+    # Closed-loop tiering rides any workload with a topology (heat plane +
+    # megastep heat phase); working_set_shift scenarios are steered onto a
+    # CXL machine so the policy has a far tier to promote from — and so the
+    # tiering_hysteresis invariant actually arms.
+    tiering = bool(topology is not None and rng.random() < 0.25)
+    if workload == "working_set_shift" and n_regions >= 3 and rng.random() < 0.8:
+        topology = "cxl_pooled"
+        n_far = int(rng.integers(1, n_regions - 1))  # keep >= 2 near regions
+        topology_args = (n_regions - n_far, n_far)
+        tiering = True
     spec = ScenarioSpec(
         seed=seed,
         ticks=int(rng.integers(10, 41)),
@@ -98,9 +112,32 @@ def sample_spec(seed: int) -> ScenarioSpec:
         blocks_per_leap=int(rng.integers(1, max(2, n_blocks // 2 + 1))),
         max_priority=int(rng.integers(0, 4)),
         writes_per_tick=int(rng.choice([0, 0, 1, 2, 4])),
+        tiering=tiering,
+        tier_epoch=int(rng.choice([2, 4])),
+        shift_every=int(rng.choice([6, 8, 12])),
+        hot_frac=float(rng.choice([0.25, 0.5])),
+        reads_per_tick=int(rng.choice([4, 8])),
         faults=_sample_faults(rng, n_regions, topology is not None),
         payload_every=int(rng.choice([1, 1, 2, 4])),
     )
+    if spec.tiering and spec.workload == "working_set_shift":
+        # Guarantee the closed loop has work from t=0: blocks spread across
+        # ALL regions (far tier populated) and a hot window wide enough to
+        # span every region, so the first acting epochs see hot far-resident
+        # blocks to promote.  Tiny dense pools otherwise sample scenarios
+        # where stray write heat keeps everything warm-and-near and the
+        # policy (correctly) never moves a block.  Overridden after
+        # construction so the rng draw stream is identical either way.
+        n_blocks = max(spec.n_blocks, 2 * spec.n_regions)
+        if spec.huge_factor > 1:
+            n_blocks = -(-n_blocks // spec.huge_factor) * spec.huge_factor
+        spec = dataclasses.replace(
+            spec,
+            placement="spread",
+            adopt_huge=False,
+            n_blocks=n_blocks,
+            hot_frac=0.5,
+        )
     spec.validate()
     return spec
 

@@ -47,6 +47,18 @@ class LeapConfig:
     link_blocks_per_tick: int | None = None  # per-link block budget at bandwidth 1.0
     # (None: defaults to budget_blocks_per_tick — one full-speed link can
     # absorb the whole tick budget; slower links get proportionally less)
+    # Closed-loop tiering (DESIGN.md §13): maintain a per-block exponentially
+    # decayed access-heat plane on device, updated as an optional megastep
+    # phase (trace-time skipped when off, so disabling tiering is bit-
+    # identical to the tiering-less engine).  The heat plane feeds
+    # repro.tiering.TieringPolicy's promotion/demotion watermarks.
+    tiering: bool = False
+    tier_heat_decay: float = 0.9  # per-update exponential decay of heat
+    tier_write_weight: float = 1.0  # heat added per write (reads add 1.0)
+    # A block re-migrated within this many ticks of its previous migration
+    # counts as a ping-pong (MigrationStats.ping_pong_migrations) — the
+    # quantity the tiering policy's hysteresis exists to suppress.
+    tier_pingpong_window: int = 16
     # Telemetry (repro.obs): off by default — the pipeline then carries the
     # shared NullRecorder and pays only attribute lookups per tick.
     telemetry: bool = False

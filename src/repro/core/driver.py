@@ -116,6 +116,15 @@ class MigrationDriver:
                 for r in range(pool_cfg.n_regions)
             ]
             tiers, promotion, last_write = None, None, None
+        if cfg.tiering:
+            # Closed-loop tiering: the device heat plane (updated as the
+            # megastep's trailing phase) starts cold.  Built before the
+            # dispatch stage so warm_dispatch can AOT-compile heat variants.
+            from repro.kernels.heat_scan import padded_heat_len
+
+            heat = jax.numpy.zeros((padded_heat_len(state.n_blocks),), jax.numpy.float32)
+        else:
+            heat = None
         self.ctx = PipelineContext(
             state=state,
             pool_cfg=pool_cfg,
@@ -129,6 +138,10 @@ class MigrationDriver:
             tiers=tiers,
             promotion=promotion,
             last_write=last_write,
+            heat=heat,
+            # Migration-recency mirror: unconditional (cheap host array) so
+            # ping-pong accounting meters every scheduler/policy identically.
+            last_migrated=np.full(state.n_blocks, -(1 << 40), dtype=np.int64),
             telemetry=make_recorder(cfg),
         )
         # Stage wiring (construction order follows the data flow).
@@ -191,8 +204,26 @@ class MigrationDriver:
 
     # -- application-facing I/O (everything mutating goes through here) ----
 
-    def read(self, block_ids) -> jax.Array:
+    def read(self, block_ids, *, note: bool = True) -> jax.Array:
+        """Read blocks out of the pool.
+
+        ``note=False`` skips the heat-plane accounting — for introspection
+        readers (the chaos payload checker scans the whole pool every tick,
+        which would wash out the workload's access signal), not workloads.
+        """
+        if note:
+            self.ctx.note_reads(block_ids)
         return leap_read(self.ctx.state, jax.numpy.asarray(block_ids))
+
+    def note_reads(self, block_ids) -> None:
+        """Feed read accesses into the heat plane without copying data out.
+
+        For layers that read the pool inside their own jitted programs (the
+        paged-KV decode step) and therefore never call :meth:`read` — they
+        report the block ids they touched here so the tiering loop still
+        sees them.  No-op when ``cfg.tiering`` is off.
+        """
+        self.ctx.note_reads(block_ids)
 
     def write(self, block_ids, values) -> None:
         self.ctx.note_writes(block_ids)
@@ -392,6 +423,18 @@ class MigrationDriver:
 
     def host_placement(self) -> np.ndarray:
         return self.ctx.table[:, REGION].copy()
+
+    def heat_snapshot(self) -> np.ndarray:
+        """Per-block access heat ``[n_blocks]`` (all zeros when tiering is off).
+
+        A host copy of the device heat plane; samples noted since the last
+        tick's dispatch are not yet folded in.  This is the tiering policy's
+        decision input — one transfer per epoch, off the tick path.
+        """
+        n = self.ctx.state.n_blocks
+        if self.ctx.heat is None:
+            return np.zeros(n, np.float32)
+        return np.asarray(self.ctx.heat)[:n].copy()
 
     def host_table(self) -> np.ndarray:
         """Copy of the exact host table mirror ``[n_blocks, (region, slot)]``."""

@@ -403,7 +403,11 @@ def zero_fill(state: LeapState, slots: jax.Array, dst_region: int) -> LeapState:
 # --------------------------------------------------------------------------
 
 
-@partial(jax.jit, donate_argnames=("state",), static_argnames=("group", "impl"))
+@partial(
+    jax.jit,
+    donate_argnames=("state", "heat"),
+    static_argnames=("group", "impl", "heat_decay"),
+)
 def megastep(
     state: LeapState,
     commit_ids: jax.Array,
@@ -421,10 +425,14 @@ def megastep(
     copy_dst: jax.Array,
     run_src: jax.Array,
     run_dst: jax.Array,
+    heat: jax.Array,
+    heat_ids: jax.Array,
+    heat_w: jax.Array,
     group: int = 1,
     impl: str | None = None,
-) -> tuple[LeapState, jax.Array, jax.Array]:
-    """One tick = one dispatch: commit -> begin -> zero -> force -> copy.
+    heat_decay: float = 1.0,
+) -> tuple[LeapState, jax.Array, jax.Array, jax.Array]:
+    """One tick = one dispatch: commit -> begin -> zero -> force -> copy -> heat.
 
     Fuses the previous epoch's commit verdicts with this tick's begin/zero/
     force/copy phases into a single XLA program over the donated pool
@@ -434,6 +442,12 @@ def megastep(
     post-commit table and the post-zero pool).  The verdict vectors stay on
     device: the host wraps them in :class:`~repro.core.queues.CommitBatch`
     futures and harvests them asynchronously, off the tick critical path.
+
+    The trailing heat phase (closed-loop tiering, DESIGN.md §13) folds the
+    tick's access samples into the donated per-block heat plane — it touches
+    no pool/table state, so its ordering is free, and its trace-time guard
+    (``heat_ids.shape[0]``) compiles the phase away entirely when tiering is
+    off: the tiering-less megastep variant is bit-identical to before.
     """
     table, dirty, in_flight = state.table, state.dirty, state.in_flight
     s_per = state.pool.shape[1]
@@ -490,6 +504,10 @@ def megastep(
     if run_src.shape[0]:
         flat = ops.copy_runs_impl(flat, run_src, run_dst, run=group, impl=impl)
 
+    # -- access heat: decay + accumulate this tick's samples (tiering) ------
+    if heat_ids.shape[0]:
+        heat = ops.heat_scan_impl(heat, heat_ids, heat_w, heat_decay, impl=impl)
+
     state = dataclasses.replace(
         state,
         pool=flat.reshape(state.pool.shape),
@@ -497,7 +515,21 @@ def megastep(
         dirty=dirty,
         in_flight=in_flight,
     )
-    return state, verdict_small, verdict_groups
+    return state, verdict_small, verdict_groups, heat
+
+
+@partial(jax.jit, donate_argnames=("heat",), static_argnames=("decay", "impl"))
+def heat_update(
+    heat: jax.Array,
+    ids: jax.Array,
+    w: jax.Array,
+    decay: float,
+    impl: str | None = None,
+) -> jax.Array:
+    """Standalone access-heat pass for the batched/legacy dispatch
+    generations (under megastep the same update rides the tick's single
+    program as its trailing phase)."""
+    return ops.heat_scan_impl(heat, ids, w, decay, impl=impl)
 
 
 # --------------------------------------------------------------------------
@@ -506,6 +538,7 @@ def megastep(
 
 _PROGRAMS = {
     "megastep": megastep,
+    "heat_update": heat_update,
     "zero_fill": zero_fill,
     "begin_area": begin_area,
     "copy_chunk": copy_chunk,

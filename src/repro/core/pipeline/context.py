@@ -48,6 +48,10 @@ class PipelineContext:
     tiers: Any = None  # TwoLevelTable
     promotion: Any = None  # PromotionPolicy
     last_write: np.ndarray | None = None  # write recency (promotion coldness)
+    # Closed-loop tiering (DESIGN.md §13; heat is None when cfg.tiering off):
+    heat: Any = None  # device [padded_heat_len] f32 per-block access heat
+    heat_pending: list = dataclasses.field(default_factory=list)  # (ids, weight)
+    last_migrated: np.ndarray | None = None  # tick of each block's last remap
     # Work queues:
     queue: AreaQueue = dataclasses.field(default_factory=AreaQueue)
     active: list[Area] = dataclasses.field(default_factory=list)
@@ -85,11 +89,51 @@ class PipelineContext:
         self.table[ids, REGION] = dst_region
         self.table[ids, SLOT] = dst_slots
         self.migrating[ids] = False
+        self.note_migrated(ids)
 
     def note_writes(self, block_ids) -> None:
-        """Stamp write recency (promotion coldness gate on the tiered pool)."""
+        """Stamp write recency (promotion coldness gate on the tiered pool)
+        and queue a heat sample (closed-loop tiering)."""
+        ids = np.asarray(block_ids)
         if self.tiers is not None:
-            self.last_write[np.asarray(block_ids)] = self.stats.ticks
+            self.last_write[ids] = self.stats.ticks
+        if self.heat is not None and ids.size:
+            self.heat_pending.append(
+                (ids.astype(np.int32).ravel(), self.cfg.tier_write_weight)
+            )
+
+    def note_reads(self, block_ids) -> None:
+        """Queue a read heat sample (no-op unless cfg.tiering is on).
+
+        Samples accumulate host-side and fold into the heat plane at the
+        tick's dispatch — under megastep as the single program's trailing
+        phase, so observing reads never adds a device dispatch.
+        """
+        if self.heat is None:
+            return
+        ids = np.asarray(block_ids, dtype=np.int32).ravel()
+        if ids.size:
+            self.heat_pending.append((ids, 1.0))
+
+    def note_migrated(self, ids) -> None:
+        """Stamp migration recency; count re-migrations as ping-pongs.
+
+        Engine-level (called on every successful remap, whatever policy
+        requested it): a block migrated again within
+        ``cfg.tier_pingpong_window`` ticks of its previous move counts one
+        ``ping_pong_migrations`` — the churn the tiering policy's hysteresis
+        exists to suppress, charged on the same meter for every baseline.
+        """
+        if self.last_migrated is None:
+            return
+        ids = np.asarray(ids)
+        if ids.size == 0:
+            return
+        now = self.stats.ticks
+        n = int(((now - self.last_migrated[ids]) <= self.cfg.tier_pingpong_window).sum())
+        if n:
+            self.count("ping_pong_migrations", n)
+        self.last_migrated[ids] = now
 
     def demote_group(self, g: int) -> None:
         """Split a huge block into G small blocks (host metadata; bytes stay).

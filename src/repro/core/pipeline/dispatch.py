@@ -207,6 +207,10 @@ class DispatchStage:
                 self._dispatch_force_batch(forced)
                 self._dispatch_copy_batch(plan)
                 self._dispatch_copy_runs(run_plan)
+        if self._mode != "megastep":
+            # Batched/legacy: the tick's access-heat samples flush as their
+            # own program (megastep folds them into its single dispatch).
+            self._flush_heat()
         # End of tick: every program that reads a forced area's old source
         # slots is dispatched; release them for the next tick's allocations.
         for old in self._freed:
@@ -384,9 +388,44 @@ class DispatchStage:
             ctx.table[ids, REGION] = area.dst_region
             ctx.table[ids, SLOT] = area.dst_slots
             ctx.migrating[ids] = False
+            ctx.note_migrated(ids)
         else:
             ctx.remap_host(area.block_ids, area.dst_region, area.dst_slots)
         self.accounting.credit(area, forced=len(area))
+
+    # -- access-heat plane (closed-loop tiering) ----------------------------
+
+    def _pop_heat(self) -> tuple[np.ndarray, np.ndarray]:
+        """Pop and flatten the tick's pending heat samples (ids, weights)."""
+        ctx = self.ctx
+        if ctx.heat is None or not ctx.heat_pending:
+            return np.zeros(0, np.int32), np.zeros(0, np.float32)
+        samples, ctx.heat_pending = ctx.heat_pending, []
+        ids = np.concatenate([s for s, _ in samples]).astype(np.int32, copy=False)
+        w = np.concatenate(
+            [np.full(len(s), wt, np.float32) for s, wt in samples]
+        )
+        return ids, w
+
+    def _flush_heat(self) -> None:
+        """Batched/legacy: fold the tick's heat samples as their own program."""
+        ctx = self.ctx
+        ids, w = self._pop_heat()
+        n = len(ids)
+        if not n:
+            return
+        bucket = self._megastep_bucket(n)
+        ids = self._pad_sentinel(ids, bucket, int(ctx.heat.shape[0]))
+        hw = np.zeros(bucket, np.float32)
+        hw[:n] = w
+        ctx.heat = migrator.heat_update(
+            ctx.heat,
+            jax.numpy.asarray(ids),
+            jax.numpy.asarray(hw),
+            ctx.cfg.tier_heat_decay,
+            impl=ctx.cfg.copy_impl,
+        )
+        ctx.count("dispatches", 1, program="heat_update")
 
     # -- megastep dispatch (one program per tick) ---------------------------
 
@@ -418,6 +457,15 @@ class DispatchStage:
             ("begin", "copy"),
             ("commit", "begin", "copy"),
         ]
+        if ctx.heat is not None:
+            # Tiering on: a read workload rides the heat phase on every
+            # nonempty tick, including read-only ticks (heat alone).
+            signatures += [
+                ("heat",),
+                ("commit", "heat"),
+                ("begin", "copy", "heat"),
+                ("commit", "begin", "copy", "heat"),
+            ]
         if G > 1:
             # Two-tier pool: the run-copy / group-commit tick shapes, at
             # their own floored bucket (budget / G groups per tick).
@@ -434,8 +482,19 @@ class DispatchStage:
         g_regions = j(np.full(gb, ctx.pool_cfg.n_regions, np.int32))
         g_starts = j(np.full(gb, ctx.pool_cfg.slots_per_region, np.int32))
         r_self = j(np.zeros(gb, np.int32))
+        empty_f = j(np.zeros(0, np.float32))
+        if ctx.heat is not None:
+            # OOB heat ids: no lane matches, and heat is all zeros at
+            # construction, so the warmed decay pass is a value no-op too.
+            h_sent = j(np.full(B, int(ctx.heat.shape[0]), np.int32))
+            h_w = j(np.zeros(B, np.float32))
         for sig in signatures:
-            ctx.state, _, _ = migrator.megastep(
+            with_heat = "heat" in sig
+            # The heat operand is donated, so a signature without the phase
+            # gets its own fresh empty buffer (reusing one would pass an
+            # already-donated buffer on the next warm call).
+            heat_in = ctx.heat if with_heat else j(np.zeros(0, np.float32))
+            out = migrator.megastep(
                 ctx.state,
                 sent if "commit" in sig else empty,
                 regions if "commit" in sig else empty,
@@ -452,9 +511,16 @@ class DispatchStage:
                 self_copy if "copy" in sig else empty,
                 r_self if "runs" in sig else empty,
                 r_self if "runs" in sig else empty,
+                heat_in,
+                h_sent if with_heat else empty,
+                h_w if with_heat else empty_f,
                 group=G,
                 impl=ctx.cfg.copy_impl,
+                heat_decay=ctx.cfg.tier_heat_decay,
             )
+            ctx.state, _, _, heat_out = out
+            if with_heat:
+                ctx.heat = heat_out
 
     def _megastep_bucket(self, *lengths: int) -> int:
         """Shared bucket for every per-block megastep operand.
@@ -503,7 +569,17 @@ class DispatchStage:
         ctx = self.ctx
         small, huge = self._staged_small, self._staged_huge
         self._staged_small, self._staged_huge = [], []
-        if not (small or huge or opened or zeros or forced or plan or run_plan):
+        heat_ids, heat_w = self._pop_heat()
+        if not (
+            small
+            or huge
+            or opened
+            or zeros
+            or forced
+            or plan
+            or run_plan
+            or len(heat_ids)
+        ):
             return
         pc = ctx.pool_cfg
         S = pc.slots_per_region
@@ -598,7 +674,22 @@ class DispatchStage:
             run_src = run_dst = np.zeros(0, np.int32)
 
         j = jax.numpy.asarray
-        ctx.state, verdict_small, verdict_groups = migrator.megastep(
+        # Heat samples pad at their OWN bucket (sentinel = heat-plane length,
+        # which both paths drop) so a read-heavy tick never inflates the
+        # shared per-block bucket — the heat batch length tracks the access
+        # rate, not the migration budget.
+        n_heat = len(heat_ids)
+        if n_heat:
+            hb = self._megastep_bucket(n_heat)
+            heat_ids = pad(heat_ids, hb, int(ctx.heat.shape[0]))
+            hw = np.zeros(hb, np.float32)
+            hw[:n_heat] = heat_w
+            heat_in, heat_ids_in, heat_w_in = ctx.heat, j(heat_ids), j(hw)
+        else:
+            heat_in = jax.numpy.zeros((0,), jax.numpy.float32)
+            heat_ids_in = j(np.zeros(0, np.int32))
+            heat_w_in = jax.numpy.zeros((0,), jax.numpy.float32)
+        ctx.state, verdict_small, verdict_groups, heat_out = migrator.megastep(
             ctx.state,
             j(commit_ids),
             j(commit_regions),
@@ -615,9 +706,15 @@ class DispatchStage:
             j(copy_dst),
             j(run_src),
             j(run_dst),
+            heat_in,
+            heat_ids_in,
+            heat_w_in,
             group=G,
             impl=ctx.cfg.copy_impl,
+            heat_decay=ctx.cfg.tier_heat_decay,
         )
+        if n_heat:
+            ctx.heat = heat_out
         ctx.count("dispatches", 1, program="megastep")
         for a in small + huge:
             ctx.active.remove(a)

@@ -33,6 +33,13 @@ class MigrationStats:
     demotions: int = 0  # huge blocks split to small under write pressure/fragmentation
     promotions: int = 0  # aligned cold runs coalesced into huge blocks
     bytes_copied_huge: int = 0  # copy traffic moved via contiguous-run programs
+    # closed-loop tiering counters (repro.tiering; DESIGN.md §13)
+    tier_promotions: int = 0  # blocks the tiering policy moved toward the near tier
+    tier_demotions: int = 0  # blocks the tiering policy pushed to the far tier
+    # re-migrations within cfg.tier_pingpong_window ticks of the previous
+    # move — counted engine-side (any scheduler/policy), so baselines without
+    # hysteresis are charged on the same meter as the tiering policy
+    ping_pong_migrations: int = 0
     # per-link counters (topology-aware scheduling; bytes_per_link is tracked
     # on every driver so benchmarks can model link costs post-hoc)
     bytes_per_link: dict = dataclasses.field(default_factory=dict)  # (src, dst) -> bytes

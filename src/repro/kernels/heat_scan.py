@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: per-block access-heat decay + accumulate (one pass).
+
+The closed-loop tiering plane (DESIGN.md §13) maintains one exponentially
+decayed heat counter per block on device:
+
+    heat' = heat * decay;  heat'[ids[k]] += w[k]   for every access sample
+
+A tick's samples arrive as a flat ``(ids, w)`` batch (reads weight 1.0,
+writes ``LeapConfig.tier_write_weight``); the whole update is ONE pass over
+the heat plane so it can ride the megastep without adding a dispatch.
+
+TPU shaping: the heat plane is stored as a flat ``[L]`` fp32 vector with
+``L`` a multiple of 1024 (= 8 sublanes x 128 lanes, see
+:func:`padded_heat_len`); the kernel views it as ``[L/128, 128]`` and grids
+over 8-row tiles.  Scatter is not a Pallas primitive, so the accumulate is a
+masked broadcast-sum: each tile compares its 1024 flat offsets against every
+sample id and sums the matching weights — O(K * L) compares, which is cheap
+for tick-sized K and pool-sized L and keeps every memory access dense and
+aligned.  Sample ids are IN-VMEM operands (replicated per tile), padded to a
+lane multiple with the out-of-bounds sentinel ``L`` (matches no offset, so a
+padded lane contributes nothing — the same drop semantics as the jnp
+oracle's ``mode="drop"`` scatter).
+
+Validated against :func:`repro.kernels.ref.heat_scan_ref` in interpret mode
+on CPU (tests/test_tiering.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+_LANES = 128
+_SUBLANES = 8
+_TILE = _LANES * _SUBLANES  # flat heat entries per grid step
+
+
+def padded_heat_len(n_blocks: int) -> int:
+    """Smallest multiple of 1024 (8 sublanes x 128 lanes) holding n_blocks."""
+    return max(1, (max(n_blocks, 1) + _TILE - 1) // _TILE) * _TILE
+
+
+def _heat_kernel(decay, ids_ref, w_ref, heat_ref, out_ref):
+    i = pl.program_id(0)
+    # Flat offsets covered by this tile: [8, 128] starting at i * 1024.
+    rows = lax.broadcasted_iota(jnp.int32, (_SUBLANES, _LANES), 0)
+    cols = lax.broadcasted_iota(jnp.int32, (_SUBLANES, _LANES), 1)
+    offs = i * _TILE + rows * _LANES + cols
+    ids = ids_ref[0, :]  # [K] (sentinel lanes never match any offset)
+    w = w_ref[0, :]  # [K]
+    hit = offs[None, :, :] == ids[:, None, None]  # [K, 8, 128]
+    acc = jnp.sum(jnp.where(hit, w[:, None, None], 0.0), axis=0)
+    out_ref[...] = heat_ref[...] * decay + acc
+
+
+def heat_scan_pallas(
+    heat: jax.Array,  # [L] f32, L % 1024 == 0
+    ids: jax.Array,  # [K] int32 (sentinel >= L = no-op lane)
+    w: jax.Array,  # [K] f32
+    decay: float,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused decay+accumulate over the flat heat plane; returns new heat."""
+    (l,) = heat.shape
+    assert l % _TILE == 0, l
+    k = ids.shape[0]
+    # Pad the sample batch to a lane multiple with the OOB sentinel (id = L
+    # matches no tile offset; weight 0 keeps padded lanes inert either way).
+    kp = max(_LANES, (k + _LANES - 1) // _LANES * _LANES)
+    if kp != k:
+        ids = jnp.concatenate([ids, jnp.full((kp - k,), l, jnp.int32)])
+        w = jnp.concatenate([w, jnp.zeros((kp - k,), w.dtype)])
+    heat2d = heat.reshape(l // _LANES, _LANES)
+    out = pl.pallas_call(
+        lambda ids_ref, w_ref, heat_ref, out_ref: _heat_kernel(
+            decay, ids_ref, w_ref, heat_ref, out_ref
+        ),
+        grid=(l // _TILE,),
+        in_specs=[
+            pl.BlockSpec((1, kp), lambda i: (0, 0)),  # ids: replicated per tile
+            pl.BlockSpec((1, kp), lambda i: (0, 0)),  # w: replicated per tile
+            pl.BlockSpec((_SUBLANES, _LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((_SUBLANES, _LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(heat2d.shape, jnp.float32),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(
+        ids.reshape(1, kp).astype(jnp.int32),
+        w.reshape(1, kp).astype(jnp.float32),
+        heat2d.astype(jnp.float32),
+    )
+    return out.reshape(l)

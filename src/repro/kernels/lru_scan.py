@@ -1,5 +1,11 @@
 """Pallas TPU kernel: blocked RG-LRU linear-recurrence scan.
 
+Naming note: ``lru`` here is the *Real-Gated Linear Recurrent Unit* of
+Griffin/RecurrentGemma — a model-side recurrence over time — NOT a
+least-recently-used page scan.  Access-recency tracking over the migration
+pool lives in :mod:`repro.kernels.heat_scan` (the closed-loop tiering heat
+plane, DESIGN.md §13); the two share nothing but the acronym.
+
 Computes ``h_t = a_t * h_{t-1} + b_t`` over the time axis (the Griffin/
 RecurrentGemma recurrence after gate computation).  XLA's
 ``associative_scan`` materializes log(T) full-size temporaries in HBM; this

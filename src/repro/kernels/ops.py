@@ -133,6 +133,32 @@ def paged_decode_partial(
 combine_partials = ref.combine_partials
 
 
+# -- access-heat scan (closed-loop tiering) ------------------------------------
+
+
+def heat_scan_impl(heat, ids, w, decay, *, impl: str | None = None):
+    """Fused decay+accumulate over the per-block heat plane (un-jitted).
+
+    Called from inside the megastep's jit (trace-time guarded on
+    ``ids.shape[0]``, so the phase compiles away entirely when tiering is
+    off); :func:`heat_scan` below is the standalone jitted entry point.
+    ``ids`` lanes ``>= len(heat)`` are inert padding on both paths.
+    """
+    if ids.shape[0] == 0:
+        return heat
+    kind, interp = _resolve(impl)
+    if kind == "pallas":
+        from repro.kernels import heat_scan as heat_mod
+
+        return heat_mod.heat_scan_pallas(heat, ids, w, decay, interpret=interp)
+    return ref.heat_scan_ref(heat, ids, w, decay)
+
+
+heat_scan = jax.jit(
+    heat_scan_impl, static_argnames=("decay", "impl"), donate_argnums=(0,)
+)
+
+
 # -- RG-LRU scan -----------------------------------------------------------------
 
 

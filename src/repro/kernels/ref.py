@@ -95,6 +95,26 @@ def combine_partials(
     return out.astype(outs.dtype)
 
 
+# -- access-heat scan (closed-loop tiering) -----------------------------------
+
+
+def heat_scan_ref(
+    heat: jax.Array,  # [L] f32 per-block heat (L = padded_heat_len(n_blocks))
+    ids: jax.Array,  # [K] int32 accessed block ids (sentinel >= L = no-op lane)
+    w: jax.Array,  # [K] f32 per-access weight (reads 1.0, writes cfg-weighted)
+    decay: float,
+) -> jax.Array:
+    """Oracle: one fused decay+accumulate pass over the heat plane.
+
+    ``heat' = heat * decay  then  heat'[ids[k]] += w[k]`` for every sample.
+    Out-of-bounds ids are dropped (``mode="drop"``), which is exactly how the
+    dispatch stage pads sample batches to their bucket — a padded lane is a
+    sentinel id ``>= L`` with weight 0 and performs no update.
+    """
+    heat = heat.astype(jnp.float32) * jnp.float32(decay)
+    return heat.at[ids].add(w.astype(jnp.float32), mode="drop")
+
+
 # -- RG-LRU linear-recurrence scan ---------------------------------------------
 
 

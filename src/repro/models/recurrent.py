@@ -5,8 +5,12 @@ the RG-LRU gated linear recurrence, gate branch through GeLU; merged
 elementwise, projected back to d_model.
 
 The recurrence ``h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t ⊙ x_t)`` is linear in
-``h``, so prefill runs as a log-depth ``jax.lax.associative_scan`` over time
-(TPU-friendly), and decode is a single fused step.  State is fp32.
+``h``, so prefill dispatches through :func:`repro.kernels.ops.lru_scan` —
+the blocked single-HBM-pass Pallas kernel on TPU, its associative-scan
+oracle elsewhere — whenever the (T, R) shape meets the kernel's tiling
+(time a multiple of the chunk, channels of the lane tile); other shapes
+keep the direct log-depth ``jax.lax.associative_scan``.  Decode is a single
+fused step.  State is fp32.
 """
 
 from __future__ import annotations
@@ -15,9 +19,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops
 from repro.models.common import dense_init
 
 _C = 8.0  # Griffin's gate temperature
+_SCAN_CHUNK = 8  # lru_scan kernel time-chunk (sublane) granule
+_SCAN_TILE = 128  # lru_scan kernel channel (lane) granule
 
 
 def rglru_init(key, cfg: ModelConfig) -> dict:
@@ -69,6 +76,12 @@ def rglru_scan(xc: jax.Array, params: dict, h0: jax.Array | None = None):
     Returns (y [B,S,R] in xc.dtype, h_last [B,R] fp32).
     """
     a, bx = _gates(xc, params)  # [B,S,R] fp32
+    batch, t, r = a.shape
+
+    if t % _SCAN_CHUNK == 0 and r % _SCAN_TILE == 0:
+        h_init = h0 if h0 is not None else jnp.zeros((batch, r), jnp.float32)
+        h = ops.lru_scan(a, bx, h_init, chunk=_SCAN_CHUNK, tile=_SCAN_TILE)
+        return h.astype(xc.dtype), h[:, -1].astype(jnp.float32)
 
     def combine(left, right):
         a1, b1 = left

@@ -162,7 +162,8 @@ def build_registry(recorder, stats=None) -> MetricsRegistry:
     tick/jit gauges that are tracked on stats rather than the recorder.
     """
     reg = MetricsRegistry()
-    for name, total in recorder.counter_totals().items():
+    totals = recorder.counter_totals()
+    for name, total in totals.items():
         reg.counter(f"leap_{name}_total", total)
     for name, hist in recorder.histograms().items():
         reg.histogram(f"leap_{name}", hist)
@@ -170,6 +171,12 @@ def build_registry(recorder, stats=None) -> MetricsRegistry:
     if stats is not None:
         reg.gauge("leap_ticks", stats.ticks)
         reg.gauge("leap_jit_cache_misses", stats.jit_cache_misses)
+        # Tiering counters live on stats even with the recorder disabled;
+        # emit from the snapshot unless the recorder already did (the
+        # ``ctx.count`` mirror makes both totals identical when enabled).
+        for name in ("tier_promotions", "tier_demotions", "ping_pong_migrations"):
+            if name not in totals:
+                reg.counter(f"leap_{name}_total", getattr(stats, name, 0))
         for (src, dst), nbytes in sorted(stats.bytes_per_link.items()):
             reg.counter(
                 "leap_link_bytes_total", nbytes, labels={"src": src, "dst": dst}

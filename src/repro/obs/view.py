@@ -26,7 +26,21 @@ class TelemetryView:
         """A sibling view whose metrics include extra series: ``extra_fn(reg)``
         runs against each freshly built :class:`MetricsRegistry` — the hook a
         layer above the driver (e.g. the serving engine's per-tenant store)
-        uses to co-expose its series in the same scrape."""
+        uses to co-expose its series in the same scrape.
+
+        Hooks *stack*: extras already attached to this view keep running (in
+        attachment order) before the new one, so e.g. the serving engine's
+        tenant series compose with the tier-residency gauges the session
+        attached underneath rather than replacing them.
+        """
+        prev = self._extra_fn
+        if prev is not None:
+            new = extra_fn
+
+            def extra_fn(reg, _prev=prev, _new=new):
+                _prev(reg)
+                _new(reg)
+
         return TelemetryView(self._recorder, self._stats_fn, extra_fn)
 
     @property

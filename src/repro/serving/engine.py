@@ -311,6 +311,15 @@ class PagedEngine:
                 seq.block_ids.append(self._alloc_block(seq.region, sid))
             self._maybe_promote(seq)
         tables, lens = self._tables(sids)
+        if self.driver.ctx.heat is not None:
+            # attention reads every page behind the frontier: feed the whole
+            # working set into the heat plane (folds into this tick's
+            # megastep — no extra dispatch, see DESIGN.md §13)
+            self.driver.note_reads(
+                np.concatenate(
+                    [np.asarray(self.seqs[s].block_ids, np.int32) for s in sids]
+                )
+            )
         toks = jnp.asarray([[self.seqs[s].tokens[-1]] for s in sids], jnp.int32)
         self._decode_shapes.add(len(sids))
         logits, self.driver.state = self._decode_step(

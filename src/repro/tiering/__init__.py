@@ -1,0 +1,13 @@
+"""Closed-loop hot/cold tiering over the device access-heat plane.
+
+See :mod:`repro.tiering.policy` and DESIGN.md §13.
+"""
+
+from repro.tiering.policy import (
+    TieringConfig,
+    TieringPolicy,
+    residency_extra,
+    split_tiers,
+)
+
+__all__ = ["TieringConfig", "TieringPolicy", "residency_extra", "split_tiers"]

@@ -305,3 +305,101 @@ def test_chaos_driver_drain_refusal_is_not_a_violation():
     report = cd.run()
     assert report.completed
     assert report.drain_refusals + len(report.events_fired) >= 1
+
+
+# -- closed-loop tiering scenarios (DESIGN.md §13) ---------------------------
+
+
+WSS_SPEC = ScenarioSpec(
+    seed=7,
+    ticks=40,
+    n_regions=3,
+    slots_per_region=16,
+    n_blocks=12,
+    topology="cxl_pooled",
+    topology_args=(2, 1),
+    workload="working_set_shift",
+    tiering=True,
+    tier_epoch=2,
+    shift_every=10,
+    hot_frac=0.25,
+    reads_per_tick=8,
+)
+
+
+def test_working_set_shift_closes_the_loop():
+    # The tiering policy is this workload's only migration source: a clean
+    # run must still migrate blocks (promotions chase the rotating hot set)
+    # while the hysteresis monitor holds alongside every other invariant.
+    report = run_scenario(WSS_SPEC)
+    assert report.completed
+    assert report.blocks_migrated > 0, "tiering policy never moved a block"
+    again = run_scenario(WSS_SPEC)
+    assert again.blocks_migrated == report.blocks_migrated  # deterministic
+
+
+def test_working_set_shift_spec_roundtrips():
+    assert ScenarioSpec.from_json(WSS_SPEC.to_json()) == WSS_SPEC
+    with pytest.raises(ValueError):
+        ScenarioSpec(hot_frac=0.0).validate()
+    with pytest.raises(ValueError):
+        ScenarioSpec(tier_epoch=0).validate()
+
+
+def test_working_set_shift_under_faults():
+    # Fault events are phase shifts: they clear the hysteresis history, so
+    # fault-driven re-tiering does not count against the policy's cooldown.
+    spec = ScenarioSpec(
+        seed=9,
+        ticks=30,
+        n_regions=3,
+        slots_per_region=16,
+        n_blocks=12,
+        topology="cxl_pooled",
+        topology_args=(2, 1),
+        workload="working_set_shift",
+        tiering=True,
+        tier_epoch=2,
+        shift_every=8,
+        faults=(
+            FaultEvent("out_of_slots", tick=12),
+            FaultEvent("congest_link", tick=20, args={"src": 0, "dst": 2, "factor": 4.0}),
+        ),
+    )
+    report = run_scenario(spec)
+    assert report.completed
+    assert len(report.events_fired) == 2
+
+
+def test_hysteresis_monitor_flags_ping_pong():
+    from repro.chaos import HysteresisMonitor
+
+    placement = np.zeros(4, np.int32)
+    mon = HysteresisMonitor(placement, window=16, max_moves=2)
+    p = placement.copy()
+    # block 1 bounces 0 -> 1 -> 0 -> 1 inside one window: third move trips
+    p[1] = 1
+    mon.observe(1, p)
+    p[1] = 0
+    mon.observe(4, p)
+    p[1] = 1
+    with pytest.raises(InvariantViolation, match="tiering_hysteresis"):
+        mon.observe(7, p)
+
+
+def test_hysteresis_monitor_phase_shift_resets_and_window_expires():
+    from repro.chaos import HysteresisMonitor
+
+    placement = np.zeros(2, np.int32)
+    mon = HysteresisMonitor(placement, window=8, max_moves=1)
+    p = placement.copy()
+    p[0] = 1
+    mon.observe(0, p)
+    mon.phase_shift()  # rotation/fault: history cleared
+    p[0] = 0
+    mon.observe(1, p)  # would be the 2nd move without the reset
+    p[0] = 1
+    mon.observe(20, p)  # 1st move long outside the window: fine too
+    p[0] = 0
+    with pytest.raises(InvariantViolation):
+        mon.observe(22, p)

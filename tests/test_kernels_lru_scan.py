@@ -53,6 +53,36 @@ def test_oracle_matches_model_rglru():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
 
 
+def test_model_routes_eligible_shapes_through_kernel_dispatcher():
+    """rglru_scan with kernel-tileable (T, R) goes through ops.lru_scan and
+    agrees with the direct associative fallback (forced via an odd T)."""
+    from repro.models.recurrent import rglru_scan
+
+    r = 128  # one lane tile, so the (T=16, R=128) prefill is kernel-eligible
+    params = {
+        "lam": jnp.full((r,), 1.0, jnp.float32),
+        "wi": 0.1 * jax.random.normal(jax.random.key(0), (r, r), jnp.float32),
+        "wr": 0.1 * jax.random.normal(jax.random.key(3), (r, r), jnp.float32),
+        "bi": jnp.zeros((r,), jnp.float32),
+        "br": jnp.zeros((r,), jnp.float32),
+    }
+    xc = jax.random.normal(jax.random.key(1), (2, 16, 128), jnp.float32)
+    h0 = jax.random.normal(jax.random.key(2), (2, 128), jnp.float32)
+    y_kernel, h_kernel = rglru_scan(xc, params, h0)  # T=16, R=128: dispatched
+    # T=17 misses the chunk granule -> direct associative path; its first 16
+    # steps are the same recurrence over the same inputs
+    xc17 = jnp.concatenate([xc, xc[:, -1:]], axis=1)
+    y_direct, _ = rglru_scan(xc17, params, h0)
+    np.testing.assert_allclose(
+        np.asarray(y_kernel), np.asarray(y_direct[:, :16]), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(h_kernel), np.asarray(y_direct[:, 15], np.float32),
+        rtol=1e-5, atol=1e-5,
+    )
+    assert h_kernel.dtype == jnp.float32
+
+
 def test_ops_dispatch():
     a, x, h0 = _inputs(2, 16, 128)
     got = ops.lru_scan(a, x, h0)  # ref on CPU
